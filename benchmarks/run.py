@@ -1,0 +1,50 @@
+"""Benchmark harness: one benchmark per paper table/figure + the roofline
+table from the dry-run artifacts (when present).
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import bench_clique, bench_iso, bench_k, bench_pattern, \
+    bench_vpq  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    results = {}
+    for name, mod in [("clique (Fig 9-11)", bench_clique),
+                      ("pattern (Fig 12-14)", bench_pattern),
+                      ("iso (Fig 15-17)", bench_iso),
+                      ("k-sweep (Fig 18)", bench_k),
+                      ("vpq (Fig 19)", bench_vpq)]:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        results[name] = mod.main(fast=args.fast)
+        print(f"[{name}] {time.time() - t0:.1f}s")
+    with open(os.path.join(args.out, "results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+    # roofline table if dry-run artifacts exist
+    try:
+        from repro.analysis.roofline import format_markdown, table
+        rows = table("single")
+        if rows:
+            print("\n=== roofline (single-pod dry-run) ===")
+            print(format_markdown(rows))
+    except Exception as exc:  # noqa: BLE001
+        print(f"(roofline table unavailable: {exc})")
+    print("\nbenchmarks complete.")
+
+
+if __name__ == "__main__":
+    main()

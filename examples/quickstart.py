@@ -1,0 +1,42 @@
+"""Quickstart: top-k subgraph discovery with Nuri-JAX.
+
+Finds the maximum clique in a synthetic social graph, demonstrating the
+paper's three mechanisms (targeted expansion, prioritized expansion,
+dominance pruning) and the candidate-count win over the baselines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core.clique import make_clique_computation
+from repro.core.engine import Engine, EngineConfig
+from repro.core.exhaustive import nuri_np_clique_candidates
+from repro.data.synthetic_graphs import planted_clique_graph
+
+
+def main():
+    print("building a 500-vertex graph with a planted 9-clique...")
+    g = planted_clique_graph(n=500, m=3000, clique_size=9, seed=42)
+
+    comp = make_clique_computation(g)
+    eng = Engine(comp, EngineConfig(k=3, batch=64, pool_capacity=16384))
+    t0 = time.time()
+    res = eng.run()
+    dt = time.time() - t0
+
+    print(f"\ntop-3 cliques (sizes {list(res.result_keys)}) "
+          f"in {dt:.2f}s")
+    print(f"  best clique: {comp.describe(res.result_states[0])}")
+    print(f"  candidates examined: {res.candidates}  "
+          f"(expanded {res.expanded}, pruned {res.pruned})")
+
+    print("\ncomparing against Nuri-NP (no prioritization/pruning)...")
+    np_res = nuri_np_clique_candidates(g, max_candidates=2_000_000)
+    suffix = "" if np_res["completed"] else "+ (budget hit)"
+    print(f"  Nuri-NP candidates: {np_res['candidates']}{suffix}")
+    print(f"  reduction from prioritization+pruning: "
+          f"{np_res['candidates'] / res.candidates:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Batched LM serving: prefill + KV-cache decode (greedy).
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --decode-steps 32
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

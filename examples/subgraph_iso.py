@@ -1,0 +1,36 @@
+"""Top-k subgraph isomorphism with index-based pruning (paper §4.3).
+
+    PYTHONPATH=src python examples/subgraph_iso.py
+"""
+import time
+
+from repro.core.engine import Engine, EngineConfig
+from repro.core.iso import build_iso_index, make_iso_computation
+from repro.data.synthetic_graphs import labeled_graph
+
+
+def main():
+    g = labeled_graph(n=300, m=1100, n_labels=3, seed=1)
+    print(f"graph: {g.n} vertices, {g.num_edges} edges")
+    t0 = time.time()
+    index = build_iso_index(g, max_hops=3)
+    print(f"hop/label/degree index built in {time.time() - t0:.2f}s")
+
+    # query: labeled triangle with a tail
+    q_edges = [(0, 1), (1, 2), (0, 2), (2, 3)]
+    q_labels = [0, 1, 1, 2]
+    comp = make_iso_computation(g, q_edges, q_labels, index)
+    t0 = time.time()
+    res = Engine(comp, EngineConfig(k=5, batch=64,
+                                    pool_capacity=16384)).run()
+    print(f"\ntop-5 matches by degree score "
+          f"({time.time() - t0:.2f}s, {res.candidates} candidates, "
+          f"{res.pruned} pruned):")
+    for i in range(5):
+        if res.result_keys[i] > -2**31 + 1:
+            print(f"  score {int(res.result_keys[i]):>4}: "
+                  f"{comp.describe(res.result_states[i])}")
+
+
+if __name__ == "__main__":
+    main()

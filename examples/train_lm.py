@@ -1,0 +1,47 @@
+"""End-to-end LM training driver (deliverable b: the e2e example).
+
+Trains a reduced-config LM for a few hundred steps with checkpointing and
+fault tolerance; `--demo-failure` kills and resumes mid-run to show the
+restart path.  Scale `--steps/--batch/--seq` up on real hardware.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 60 --demo-failure
+"""
+import argparse
+import tempfile
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--demo-failure", action="store_true")
+    args = ap.parse_args()
+
+    ckdir = tempfile.mkdtemp(prefix="repro_ck_")
+    if args.demo_failure:
+        half = args.steps // 2
+        print(f"=== run 1: will fail at step {half} ===")
+        try:
+            train(args.arch, args.steps, args.batch, args.seq,
+                  checkpoint_dir=ckdir, checkpoint_every=10,
+                  fail_at_step=half)
+        except SystemExit as e:
+            print(e)
+        print("\n=== run 2: resuming from the last committed checkpoint ===")
+        _, losses = train(args.arch, args.steps, args.batch, args.seq,
+                          checkpoint_dir=ckdir, checkpoint_every=10,
+                          resume=True)
+    else:
+        _, losses = train(args.arch, args.steps, args.batch, args.seq,
+                          checkpoint_dir=ckdir, checkpoint_every=25)
+    print(f"\nloss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({len(losses)} steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Per (arch × shape × mesh) cell, derives the three roofline terms from the
+compiled single-pod dry-run (hardware: TPU v5e):
+
+* compute    = HLO_FLOPs / (chips × 197e12 FLOP/s bf16)
+* memory     = HLO_bytes / (chips × 819e9 B/s HBM)
+* collective = collective_operand_bytes / (chips × 50e9 B/s per ICI link)
+
+``cost_analysis`` is *per-device* on the partitioned module, so FLOPs/bytes
+are already divided by the chip count — terms below use the per-device
+numbers directly against one chip's peaks.  Collective bytes come from the
+HLO text parse (operand bytes per collective op, scan-corrected by the
+probe fit; see launch/dryrun.py).
+
+MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for training; 2·N·D for
+inference forward passes.  The ratio MODEL_FLOPS / HLO_FLOPS_global shows
+how much compiled compute is "useful" (remat/dispatch/attention overheads
+push it below 1).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / ICI link
+
+
+def load_cells(art_dir: str = "artifacts/dryrun",
+               mesh: str = "single") -> List[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(art_dir, mesh, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def model_flops(rec: dict) -> float:
+    meta = rec.get("meta", {})
+    n_active = meta.get("active_params", 0)
+    kind = meta.get("kind", "train")
+    if "tokens" in meta:
+        d = meta["tokens"]
+    elif "batch" in meta:
+        d = meta["batch"]
+    elif "candidates" in meta:
+        d = meta["candidates"]
+    else:
+        d = meta.get("nodes", 0)
+    factor = 6 if kind == "train" else 2
+    return factor * n_active * d
+
+
+def roofline_terms(rec: dict) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    chips = 1
+    for v in rec["mesh_shape"].values():
+        chips *= v
+    cost = rec["cost"]
+    colls = rec.get("collectives", {})
+    coll_bytes = sum(v.get("operand_bytes", 0) for v in colls.values())
+    t_compute = cost["flops"] / PEAK_FLOPS
+    t_memory = cost["bytes_accessed"] / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    terms = dict(compute_s=t_compute, memory_s=t_memory,
+                 collective_s=t_coll)
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = cost["flops"] * chips
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        chips=chips, **terms,
+        dominant=dominant.replace("_s", ""),
+        bound_s=max(terms.values()),
+        model_flops=mf,
+        hlo_flops_global=hlo_global,
+        useful_ratio=(mf / hlo_global) if hlo_global else 0.0,
+        peak_gib=rec["memory"]["peak_bytes"] / 2 ** 30,
+        roofline_fraction=(min(t_compute, max(terms.values())) and
+                           t_compute / max(terms.values())),
+        collectives=colls,
+    )
+
+
+def table(mesh: str = "single", art_dir: str = "artifacts/dryrun"
+          ) -> List[dict]:
+    rows = []
+    for rec in load_cells(art_dir, mesh):
+        t = roofline_terms(rec)
+        if t:
+            rows.append(t)
+    return rows
+
+
+def format_markdown(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | bound | "
+           "roofline frac | MODEL/HLO | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{r['useful_ratio']:.2f} | {r['peak_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    rows = table(args.mesh, args.dir)
+    print(format_markdown(rows))
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        collb = max(rows, key=lambda r: r["collective_s"])
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"({worst['roofline_fraction']:.2f})")
+        print(f"most collective-bound:   {collb['arch']}/{collb['shape']} "
+              f"({collb['collective_s']:.3e}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Assigned-architecture registry: ``get_arch(name)`` / ``list_archs()``.
+
+Importing this package registers all ten architectures.
+"""
+from repro.configs.base import (Arch, ShapeSpec, get_arch, list_archs,
+                                round_up)
+from repro.configs import (arctic_480b, equiformer_v2, gemma2_9b, glm4_9b,
+                           granite_moe_1b, graphcast, mace,
+                           phi3_mini_3p8b, schnet, wide_deep)
+
+ALL_ARCHS = sorted(list_archs())

@@ -1,0 +1,40 @@
+"""arctic-480b [hf:Snowflake/snowflake-arctic-base]: MoE 35L d_model=7168
+56H (GQA kv=8) d_ff=4864 vocab=32000, 128 experts top-2 + dense residual.
+
+At 480B params the expert weights must be *fully* sharded: the sharding
+rules override puts ``expert_ff`` on the ``data`` axis in addition to
+``experts`` on ``model`` (2-D expert tensor parallelism / ZeRO-3-like under
+GSPMD) so per-chip parameter+optimizer state fits a v5e's 16 GB.
+"""
+from repro.configs.base import Arch, FULL_ATTENTION_SKIP, LM_SHAPES, register
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+SHARDING_OVERRIDES = {"expert_ff": ("pod", "data")}
+
+
+def make_model_cfg(shape=None):
+    tokens = (shape.sizes["global_batch"] * shape.sizes["seq_len"]
+              if shape is not None and shape.kind in ("train", "prefill")
+              else 0)
+    chunks = max(1, tokens // 65536)
+    return TransformerConfig(
+        name="arctic-480b", n_layers=35, d_model=7168, n_heads=56,
+        n_kv_heads=8, d_ff=4864, vocab=32000,
+        moe=MoEConfig(num_experts=128, top_k=2, d_ff_expert=4864,
+                      token_chunks=chunks),
+        dense_residual=True)
+
+
+def make_smoke_cfg():
+    return TransformerConfig(
+        name="arctic-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=512,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=64),
+        dense_residual=True, q_chunk=32, kv_chunk=32, loss_chunk=32)
+
+
+ARCH = register(Arch(
+    name="arctic-480b", family="lm", make_model_cfg=make_model_cfg,
+    make_smoke_cfg=make_smoke_cfg, shapes=LM_SHAPES,
+    skip_shapes=dict(FULL_ATTENTION_SKIP)))

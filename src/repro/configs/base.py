@@ -1,0 +1,102 @@
+"""Architecture/shape registry.
+
+Each assigned architecture registers an :class:`Arch`; every ``(arch,
+shape)`` pair is a *cell* — the unit the dry-run lowers and the roofline
+table reports.  ``kind`` selects the program: ``train`` → ``train_step``,
+``prefill``/``decode``/``serve``/``retrieval`` → the serving entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+_REGISTRY: Dict[str, "Arch"] = {}
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                      # train | prefill | decode | serve | retrieval
+    sizes: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    name: str
+    family: str                    # lm | gnn | recsys
+    make_model_cfg: Callable       # (ShapeSpec | None) -> model config
+    make_smoke_cfg: Callable       # () -> reduced config for CPU smoke tests
+    shapes: Dict[str, ShapeSpec]
+    skip_shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    notes: str = ""
+
+    def runnable_shapes(self):
+        return {k: v for k, v in self.shapes.items()
+                if k not in self.skip_shapes}
+
+
+def register(arch: Arch) -> Arch:
+    _REGISTRY[arch.name] = arch
+    return arch
+
+
+def get_arch(name: str) -> Arch:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs():
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------- LM shapes
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train",
+                          dict(seq_len=4096, global_batch=256)),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                             dict(seq_len=32768, global_batch=32)),
+    "decode_32k": ShapeSpec("decode_32k", "decode",
+                            dict(seq_len=32768, global_batch=128)),
+    "long_500k": ShapeSpec("long_500k", "decode",
+                           dict(seq_len=524288, global_batch=1)),
+}
+
+FULL_ATTENTION_SKIP = {
+    "long_500k": ("pure full-attention arch: 512k-context decode would be a "
+                  "full-attention KV read; skipped per brief (run only for "
+                  "local/global hybrid gemma2) — see DESIGN.md §5"),
+}
+
+# --------------------------------------------------------------- GNN shapes
+GNN_SHAPES = {
+    "full_graph_sm": ShapeSpec("full_graph_sm", "train", dict(
+        n_nodes=2708, n_edges=10556, d_feat=1433, d_out=7, edge_chunks=1)),
+    "minibatch_lg": ShapeSpec("minibatch_lg", "train", dict(
+        # padded neighbor-sampler output: 1024 seeds, fanout 15-10
+        n_nodes=round_up(1024 + 1024 * 15 + 1024 * 150 + 1, 512),
+        n_edges=1024 * 15 + 1024 * 150, d_feat=602, d_out=41,
+        edge_chunks=4, sampled=True,
+        src_nodes=232965, src_edges=114615892, batch_nodes=1024,
+        fanout=(15, 10))),
+    "ogb_products": ShapeSpec("ogb_products", "train", dict(
+        n_nodes=round_up(2449029 + 1, 512),
+        n_edges=round_up(61859140, 64 * 512), d_feat=100, d_out=47,
+        edge_chunks=64)),
+    "molecule": ShapeSpec("molecule", "train", dict(
+        n_nodes=30 * 128, n_edges=64 * 128, d_feat=16, d_out=1,
+        edge_chunks=1, batch_graphs=128, atoms=30)),
+}
+
+# ------------------------------------------------------------ recsys shapes
+RECSYS_SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "train", dict(batch=65536)),
+    "serve_p99": ShapeSpec("serve_p99", "serve", dict(batch=512)),
+    "serve_bulk": ShapeSpec("serve_bulk", "serve", dict(batch=262144)),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval",
+                                dict(batch=1, n_candidates=1_000_000)),
+}

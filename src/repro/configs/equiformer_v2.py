@@ -1,0 +1,23 @@
+"""equiformer-v2 [arXiv:2306.12059]: 12L d_hidden=128 l_max=6 m_max=2 8H,
+SO(2)-eSCN equivariant graph attention."""
+from repro.configs.base import Arch, GNN_SHAPES, register
+from repro.models.equivariant import EquiformerV2Config
+
+
+def make_model_cfg(shape):
+    s = shape.sizes
+    return EquiformerV2Config(
+        name="equiformer-v2", n_layers=12, d_hidden=128, l_max=6, m_max=2,
+        n_heads=8, d_in=s["d_feat"], d_out=s["d_out"],
+        edge_chunks=s["edge_chunks"])
+
+
+def make_smoke_cfg():
+    return EquiformerV2Config(name="eqv2-smoke", n_layers=2, d_hidden=16,
+                              l_max=3, m_max=2, n_heads=4, d_in=8, d_out=1,
+                              edge_chunks=2)
+
+
+ARCH = register(Arch(
+    name="equiformer-v2", family="gnn", make_model_cfg=make_model_cfg,
+    make_smoke_cfg=make_smoke_cfg, shapes=GNN_SHAPES))

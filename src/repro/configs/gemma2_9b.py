@@ -1,0 +1,29 @@
+"""gemma2-9b [arXiv:2408.00118]: dense 42L d_model=3584 16H (GQA kv=8)
+d_ff=14336 vocab=256000 — local(4096)+global alternating, logit softcap,
+post-norms, head_dim 256.  The one LM arch that RUNS long_500k (hybrid
+sub-quadratic: half the layers are 4096-window local)."""
+from repro.configs.base import Arch, LM_SHAPES, register
+from repro.models.transformer import TransformerConfig
+
+
+def make_model_cfg(shape=None):
+    return TransformerConfig(
+        name="gemma2-9b", n_layers=42, d_model=3584, n_heads=16,
+        n_kv_heads=8, d_head=256, d_ff=14336, vocab=256000,
+        window=4096, local_global=True, use_post_norms=True,
+        attn_softcap=50.0, final_softcap=30.0)
+
+
+def make_smoke_cfg():
+    return TransformerConfig(
+        name="gemma2-9b-smoke", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_head=16, d_ff=128, vocab=512, window=16,
+        local_global=True, use_post_norms=True, attn_softcap=50.0,
+        final_softcap=30.0, q_chunk=32, kv_chunk=32, loss_chunk=32)
+
+
+ARCH = register(Arch(
+    name="gemma2-9b", family="lm", make_model_cfg=make_model_cfg,
+    make_smoke_cfg=make_smoke_cfg, shapes=LM_SHAPES,
+    notes="long_500k runs: alternating local layers bound half the KV reads "
+          "to a 4096 window (static dynamic-slice decode reads)"))

@@ -1,0 +1,23 @@
+"""glm4-9b [hf:THUDM/glm-4-9b]: dense 40L d_model=4096 32H (GQA kv=2)
+d_ff=13696 vocab=151552 — RoPE, GQA."""
+from repro.configs.base import Arch, FULL_ATTENTION_SKIP, LM_SHAPES, register
+from repro.models.transformer import TransformerConfig
+
+
+def make_model_cfg(shape=None):
+    return TransformerConfig(
+        name="glm4-9b", n_layers=40, d_model=4096, n_heads=32, n_kv_heads=2,
+        d_ff=13696, vocab=151552, rope_theta=10000.0)
+
+
+def make_smoke_cfg():
+    return TransformerConfig(
+        name="glm4-9b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=512, q_chunk=32, kv_chunk=32,
+        loss_chunk=32)
+
+
+ARCH = register(Arch(
+    name="glm4-9b", family="lm", make_model_cfg=make_model_cfg,
+    make_smoke_cfg=make_smoke_cfg, shapes=LM_SHAPES,
+    skip_shapes=dict(FULL_ATTENTION_SKIP)))

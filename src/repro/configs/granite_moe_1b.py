@@ -1,0 +1,32 @@
+"""granite-moe-1b-a400m [hf:ibm-granite/granite-3.0-1b-a400m-base]:
+MoE 24L d_model=1024 16H (GQA kv=8) d_ff=512/expert vocab=49155,
+32 experts top-8."""
+from repro.configs.base import Arch, FULL_ATTENTION_SKIP, LM_SHAPES, register
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+
+def make_model_cfg(shape=None):
+    tokens = (shape.sizes["global_batch"] * shape.sizes["seq_len"]
+              if shape is not None and shape.kind in ("train", "prefill")
+              else 0)
+    chunks = max(1, tokens // 65536)
+    return TransformerConfig(
+        name="granite-moe-1b-a400m", n_layers=24, d_model=1024, n_heads=16,
+        n_kv_heads=8, d_ff=512, vocab=49155,
+        moe=MoEConfig(num_experts=32, top_k=8, d_ff_expert=512,
+                      token_chunks=chunks))
+
+
+def make_smoke_cfg():
+    return TransformerConfig(
+        name="granite-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab=512,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32),
+        q_chunk=32, kv_chunk=32, loss_chunk=32)
+
+
+ARCH = register(Arch(
+    name="granite-moe-1b-a400m", family="lm", make_model_cfg=make_model_cfg,
+    make_smoke_cfg=make_smoke_cfg, shapes=LM_SHAPES,
+    skip_shapes=dict(FULL_ATTENTION_SKIP)))

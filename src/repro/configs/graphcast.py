@@ -1,0 +1,25 @@
+"""graphcast [arXiv:2212.12794]: encoder-processor(16L, d=512)-decoder mesh
+GNN, sum aggregator, n_vars=227."""
+from repro.configs.base import Arch, GNN_SHAPES, register
+from repro.models.gnn import GraphCastConfig
+
+
+def make_model_cfg(shape):
+    s = shape.sizes
+    return GraphCastConfig(
+        name="graphcast", n_layers=16, d_hidden=512, n_vars=s["d_out"],
+        d_in=s["d_feat"], edge_chunks=s["edge_chunks"])
+
+
+def make_smoke_cfg():
+    return GraphCastConfig(name="gc-smoke", n_layers=2, d_hidden=16,
+                           n_vars=1, d_in=8, edge_chunks=2)
+
+
+ARCH = register(Arch(
+    name="graphcast", family="gnn", make_model_cfg=make_model_cfg,
+    make_smoke_cfg=make_smoke_cfg, shapes=GNN_SHAPES,
+    notes="mesh_refinement=6 icosahedral mesh replaced by the benchmark "
+          "graph per the shared-shape rule (DESIGN.md §8); n_vars follows "
+          "the shape's d_out for node-level tasks, 227 for its native "
+          "weather regression"))

@@ -1,0 +1,22 @@
+"""mace [arXiv:2206.07697]: 2L d_hidden=128 l_max=2 correlation=3 n_rbf=8
+E(3)-ACE higher-order equivariant message passing."""
+from repro.configs.base import Arch, GNN_SHAPES, register
+from repro.models.equivariant import MACEConfig
+
+
+def make_model_cfg(shape):
+    s = shape.sizes
+    return MACEConfig(
+        name="mace", n_layers=2, d_hidden=128, l_max=2, correlation=3,
+        n_rbf=8, d_in=s["d_feat"], d_out=s["d_out"],
+        edge_chunks=s["edge_chunks"])
+
+
+def make_smoke_cfg():
+    return MACEConfig(name="mace-smoke", d_hidden=16, d_in=8, d_out=1,
+                      edge_chunks=2)
+
+
+ARCH = register(Arch(
+    name="mace", family="gnn", make_model_cfg=make_model_cfg,
+    make_smoke_cfg=make_smoke_cfg, shapes=GNN_SHAPES))

@@ -1,0 +1,22 @@
+"""phi3-mini-3.8b [arXiv:2404.14219]: dense 32L d_model=3072 32H (kv=32)
+d_ff=8192 vocab=32064 — RoPE SwiGLU."""
+from repro.configs.base import Arch, FULL_ATTENTION_SKIP, LM_SHAPES, register
+from repro.models.transformer import TransformerConfig
+
+
+def make_model_cfg(shape=None):
+    return TransformerConfig(
+        name="phi3-mini-3.8b", n_layers=32, d_model=3072, n_heads=32,
+        n_kv_heads=32, d_ff=8192, vocab=32064)
+
+
+def make_smoke_cfg():
+    return TransformerConfig(
+        name="phi3-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=512, q_chunk=32, kv_chunk=32, loss_chunk=32)
+
+
+ARCH = register(Arch(
+    name="phi3-mini-3.8b", family="lm", make_model_cfg=make_model_cfg,
+    make_smoke_cfg=make_smoke_cfg, shapes=LM_SHAPES,
+    skip_shapes=dict(FULL_ATTENTION_SKIP)))

@@ -1,0 +1,20 @@
+"""schnet [arXiv:1706.08566]: 3 interactions d_hidden=64 rbf=300 cutoff=10."""
+from repro.configs.base import Arch, GNN_SHAPES, register
+from repro.models.gnn import SchNetConfig
+
+
+def make_model_cfg(shape):
+    s = shape.sizes
+    return SchNetConfig(
+        name="schnet", n_interactions=3, d_hidden=64, n_rbf=300, cutoff=10.0,
+        d_in=s["d_feat"], d_out=s["d_out"], edge_chunks=s["edge_chunks"])
+
+
+def make_smoke_cfg():
+    return SchNetConfig(name="schnet-smoke", d_hidden=16, n_rbf=20, d_in=8,
+                        d_out=1, edge_chunks=2)
+
+
+ARCH = register(Arch(
+    name="schnet", family="gnn", make_model_cfg=make_model_cfg,
+    make_smoke_cfg=make_smoke_cfg, shapes=GNN_SHAPES))

@@ -1,0 +1,21 @@
+"""wide-deep [arXiv:1606.07792]: 40 sparse fields, embed_dim=32,
+MLP 1024-512-256, concat interaction."""
+from repro.configs.base import Arch, RECSYS_SHAPES, register
+from repro.models.recsys import WideDeepConfig
+
+
+def make_model_cfg(shape=None):
+    return WideDeepConfig(
+        name="wide-deep", n_sparse=40, n_dense=13,
+        vocab_per_field=1_000_000, embed_dim=32, mlp_dims=(1024, 512, 256))
+
+
+def make_smoke_cfg():
+    return WideDeepConfig(
+        name="wd-smoke", n_sparse=8, n_dense=4, vocab_per_field=1000,
+        embed_dim=8, mlp_dims=(32, 16))
+
+
+ARCH = register(Arch(
+    name="wide-deep", family="recsys", make_model_cfg=make_model_cfg,
+    make_smoke_cfg=make_smoke_cfg, shapes=RECSYS_SHAPES))

@@ -1,0 +1,1 @@
+"""Nuri core: the paper's computational models on JAX."""

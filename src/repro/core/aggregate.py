@@ -1,0 +1,137 @@
+"""Aggregate computational model — paper Algorithm 2 (top-k pattern mining).
+
+Groups subgraphs by their grouping key (the pattern's minimal DFS code),
+keeps a priority queue of *groups*, and applies the paper's user functions
+at group granularity:
+
+* ``key(s)``        — the minimal DFS code (pattern-oriented expansion),
+* ``relevant(S)``   — pattern has exactly ``M`` edges,
+* ``priority(S)``   — lexicographic ``(m(S), f(S))`` (edge count, support):
+  larger patterns first, then more frequent ones (paper §3.3),
+* ``dominated(S,S')`` — ``f(S) < f(S')`` — sound because minimum
+  image-based support is anti-monotone [5].
+
+Ragged group bookkeeping (patterns, heaps, dict of groups) is host-side;
+embedding extension — the actual compute — is the vectorized CSR/bitset
+path in :mod:`repro.core.patterns` (DESIGN.md §2: host orchestrates,
+device-shaped arrays do the work).
+
+Also implements the paper's comparison baseline
+(:func:`arabesque_style_mining`): level-synchronous edge-oriented expansion
+with an a-priori support threshold ``T`` — the Abq-µ / Abq-µ/3 runs of
+Figures 12-14 — which cannot prioritize and must finish every level.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .graph import GraphStore
+from .patterns import (Code, PatternGroup, expand_group, seed_groups)
+
+
+@dataclasses.dataclass
+class MiningResult:
+    patterns: List[Tuple[Code, int]]      # [(code, support)] best-first
+    candidates: int                       # embeddings materialized (metric 1)
+    groups_expanded: int
+    groups_pruned: int
+    completed: bool = True
+
+
+def topk_frequent_patterns(g: GraphStore, m_edges: int, k: int = 1,
+                           max_candidates: int = 50_000_000) -> MiningResult:
+    """Nuri: prioritized + pruned top-k mining of M-edge patterns (Alg. 2)."""
+    groups = seed_groups(g)
+    candidates = sum(len(gr.embeddings) for gr in groups.values())
+    counter = itertools.count()
+    pq: List[tuple] = []
+    for code, gr in groups.items():
+        sup = gr.support()
+        # max-heap via negated lexicographic (m, f)
+        heapq.heappush(pq, ((-len(code), -sup), next(counter), gr, sup))
+
+    results: List[Tuple[int, Code]] = []   # (support, code), kept sorted
+    expanded = pruned = 0
+
+    def kth_support() -> Optional[int]:
+        return results[k - 1][0] if len(results) >= k else None
+
+    while pq:
+        _, _, gr, sup = heapq.heappop(pq)
+        thr = kth_support()
+        # relevant(S): pattern of exactly M edges → result candidate
+        if gr.num_edges == m_edges:
+            if thr is None or sup >= thr:
+                results.append((sup, gr.code))
+                results.sort(key=lambda t: (-t[0], t[1]))
+                del results[k:]
+            continue                        # M-edge groups are not expanded
+        # dominated(S, kth): anti-monotone support bound
+        if thr is not None and sup < thr:
+            pruned += 1
+            continue
+        children, created = expand_group(g, gr)
+        candidates += created
+        expanded += 1
+        if candidates > max_candidates:
+            return MiningResult([(s, c) for s, c in results], candidates,
+                                expanded, pruned, completed=False)
+        thr = kth_support()
+        for code, child in children.items():
+            csup = child.support()
+            if thr is not None and csup < thr:    # line 26 pruning
+                pruned += 1
+                continue
+            heapq.heappush(pq, ((-len(code), -csup), next(counter),
+                                child, csup))
+
+    return MiningResult([(s, c) for s, c in results], candidates,
+                        expanded, pruned)
+
+
+def arabesque_style_mining(g: GraphStore, m_edges: int, threshold: int,
+                           max_candidates: int = 50_000_000) -> MiningResult:
+    """Arabesque-style baseline: level-synchronous frequent-pattern mining
+    with a user-supplied threshold ``T`` (paper §6.3).
+
+    All patterns of size m are expanded before any of size m+1 (no
+    prioritization); the only pruning is the a-priori ``support >= T``
+    filter.  Top-k is selected a posteriori among the M-edge patterns.
+    """
+    groups = seed_groups(g)
+    candidates = sum(len(gr.embeddings) for gr in groups.values())
+    expanded = pruned = 0
+    level = {c: gr for c, gr in groups.items()
+             if gr.support() >= threshold}
+    finals: List[Tuple[int, Code]] = []
+    for _ in range(m_edges - 1):
+        nxt: Dict[Code, PatternGroup] = {}
+        for gr in level.values():
+            children, created = expand_group(g, gr)
+            candidates += created
+            expanded += 1
+            if candidates > max_candidates:
+                return MiningResult(finals, candidates, expanded, pruned,
+                                    completed=False)
+            for code, child in children.items():
+                if child.support() >= threshold:
+                    if code not in nxt:
+                        nxt[code] = child
+                else:
+                    pruned += 1
+        level = nxt
+    finals = sorted(((gr.support(), c) for c, gr in level.items()),
+                    key=lambda t: (-t[0], t[1]))
+    return MiningResult(finals, candidates, expanded, pruned)
+
+
+def max_support_of_size(g: GraphStore, m_edges: int) -> int:
+    """µ — the maximum support over M-edge patterns (used to position the
+    baseline's threshold at µ and µ/3 as in Figures 12-14)."""
+    res = topk_frequent_patterns(g, m_edges, k=1)
+    return res.patterns[0][0] if res.patterns else 0

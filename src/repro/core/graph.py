@@ -1,0 +1,136 @@
+"""Graph store: the data-graph substrate shared by the Nuri engine and the
+GNN workloads.
+
+Holds three synchronized views of an undirected (optionally labeled) graph:
+
+* **CSR** (``indptr``/``indices``) — for neighbor iteration, sampling, and
+  ``segment_sum`` message passing,
+* **edge list** (``src``/``dst``, each undirected edge twice) — for GNN
+  scatter kernels,
+* **bitset adjacency** (``adj_bits [N, W] uint32``) — for the discovery
+  engine's vectorized set intersections.
+
+All arrays are numpy on the host; :meth:`device_arrays` returns the jnp views
+the engine closes over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import bitset
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphStore:
+    n: int                               # number of vertices
+    indptr: np.ndarray                   # [N+1] int32 CSR row pointers
+    indices: np.ndarray                  # [M2] int32 CSR column indices (sorted per row)
+    labels: Optional[np.ndarray] = None  # [N] int32 vertex labels (None = unlabeled)
+
+    # ---------------------------------------------------------------- build
+    @staticmethod
+    def from_edges(n: int, edges: np.ndarray,
+                   labels: Optional[np.ndarray] = None) -> "GraphStore":
+        """Build from an undirected edge array [M, 2]; dedupes + drops loops."""
+        edges = np.asarray(edges, np.int64).reshape(-1, 2)
+        edges = edges[edges[:, 0] != edges[:, 1]]
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        key = lo * n + hi
+        _, first = np.unique(key, return_index=True)
+        lo, hi = lo[first], hi[first]
+        src = np.concatenate([lo, hi])
+        dst = np.concatenate([hi, lo])
+        order = np.lexsort((dst, src))
+        src, dst = src[order], dst[order]
+        indptr = np.zeros(n + 1, np.int64)
+        np.add.at(indptr, src + 1, 1)
+        indptr = np.cumsum(indptr)
+        return GraphStore(
+            n=n,
+            indptr=indptr.astype(np.int32),
+            indices=dst.astype(np.int32),
+            labels=None if labels is None else np.asarray(labels, np.int32),
+        )
+
+    # ------------------------------------------------------------ properties
+    @property
+    def num_edges(self) -> int:
+        """Number of undirected edges."""
+        return len(self.indices) // 2
+
+    @cached_property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int32)
+
+    @cached_property
+    def adj_bits(self) -> np.ndarray:
+        """[N, W] uint32 packed adjacency rows."""
+        w = bitset.num_words(self.n)
+        out = np.zeros((self.n, w), np.uint32)
+        src = np.repeat(np.arange(self.n), np.diff(self.indptr))
+        dst = self.indices.astype(np.int64)
+        np.bitwise_or.at(
+            out, (src, dst // 32), np.uint32(1) << (dst % 32).astype(np.uint32))
+        return out
+
+    @cached_property
+    def edge_array(self) -> np.ndarray:
+        """[M2, 2] directed edge list (each undirected edge both ways)."""
+        src = np.repeat(np.arange(self.n, dtype=np.int32),
+                        np.diff(self.indptr))
+        return np.stack([src, self.indices], axis=1)
+
+    @cached_property
+    def label_bits(self) -> Optional[np.ndarray]:
+        """[L, W] uint32: bitset of vertices per label."""
+        if self.labels is None:
+            return None
+        n_labels = int(self.labels.max()) + 1
+        return np.stack([
+            bitset.from_indices(np.nonzero(self.labels == l)[0], self.n)
+            for l in range(n_labels)])
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def has_edge(self, u: int, v: int) -> bool:
+        row = self.neighbors(u)
+        i = np.searchsorted(row, v)
+        return bool(i < len(row) and row[i] == v)
+
+    # ------------------------------------------------------------ device view
+    def device_arrays(self) -> dict:
+        d = dict(
+            adj_bits=jnp.asarray(self.adj_bits),
+            gt_bits=jnp.asarray(bitset.lt_mask_table(self.n)),
+            degrees=jnp.asarray(self.degrees),
+            indptr=jnp.asarray(self.indptr),
+            indices=jnp.asarray(self.indices),
+        )
+        if self.labels is not None:
+            d["labels"] = jnp.asarray(self.labels)
+            d["label_bits"] = jnp.asarray(self.label_bits)
+        return d
+
+    # --------------------------------------------------------------- queries
+    def bfs_hops(self, source: int, max_hops: int) -> np.ndarray:
+        """[N] hop distance from ``source`` (-1 if > max_hops / unreachable)."""
+        dist = np.full(self.n, -1, np.int32)
+        dist[source] = 0
+        frontier = np.array([source])
+        for h in range(1, max_hops + 1):
+            nxt = np.unique(np.concatenate(
+                [self.neighbors(v) for v in frontier])) if len(frontier) else \
+                np.empty(0, np.int32)
+            nxt = nxt[dist[nxt] < 0]
+            dist[nxt] = h
+            frontier = nxt
+            if not len(frontier):
+                break
+        return dist

@@ -1,0 +1,272 @@
+"""gSpan DFS codes and pattern-oriented expansion (paper §3.3, [62]).
+
+A pattern is a DFS code — a tuple of edges ``(i, j, li, lj)`` over discovery
+ids — and a *group* is the pattern plus all of its embeddings (ordered tuples
+of data vertices, one column per discovery id).  Pattern-oriented expansion
+extends every embedding of a group by one rightmost-path edge; a child
+pattern is kept only if its code is **minimal** (gSpan canonicality), which
+yields Property 1 of the paper: all embeddings of a child pattern come from
+exactly one parent group.
+
+Embedding extension is numpy-vectorized CSR gathering (no per-embedding
+Python loops); edge-existence checks use the packed bitset adjacency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import GraphStore
+
+Code = Tuple[Tuple[int, int, int, int], ...]   # ((i, j, li, lj), ...)
+
+
+def edge_key(e: Tuple[int, int, int, int]) -> tuple:
+    """Sortable key implementing gSpan's edge order ≺ [62]: backward edges
+    before forward (for extensions of the same prefix), backward by
+    increasing target id, forward by *decreasing* source id (deeper
+    rightmost-path vertices first), then by labels."""
+    i, j, li, lj = e
+    if j < i:                       # backward
+        return (0, j, li, lj)
+    return (1, -i, li, lj)          # forward
+
+
+def code_key(code) -> tuple:
+    return tuple(edge_key(e) for e in code)
+
+
+# --------------------------------------------------------------- code algebra
+def code_num_vertices(code: Code) -> int:
+    return max(max(e[0], e[1]) for e in code) + 1
+
+
+def code_vertex_labels(code: Code) -> List[int]:
+    labels = [0] * code_num_vertices(code)
+    for i, j, li, lj in code:
+        labels[i] = li
+        labels[j] = lj
+    return labels
+
+
+def code_rightmost_path(code: Code) -> List[int]:
+    """Vertex ids on the rightmost path, root first."""
+    rightmost = 0
+    parent = {}
+    for i, j, _, _ in code:
+        if j > i:                      # forward edge
+            parent[j] = i
+            rightmost = max(rightmost, j)
+    path = [rightmost]
+    while path[-1] in parent:
+        path.append(parent[path[-1]])
+    return path[::-1]
+
+
+def _pattern_adj(code: Code) -> List[set]:
+    nv = code_num_vertices(code)
+    adj = [set() for _ in range(nv)]
+    for i, j, _, _ in code:
+        adj[i].add(j)
+        adj[j].add(i)
+    return adj
+
+
+def min_dfs_code(vertex_labels: Sequence[int],
+                 edges: Sequence[Tuple[int, int]]) -> Code:
+    """Canonical (minimal) DFS code of a small pattern graph.
+
+    Recursive greedy construction: at every step only the extensions whose
+    code-edge value is minimal (gSpan's ≺ order: backward before forward,
+    backward by increasing target id, forward from deepest rightmost-path
+    vertex, ties by new-vertex label) are explored; ties branch and the
+    lexicographically smallest completed code wins.
+    """
+    nv = len(vertex_labels)
+    adj = [set() for _ in range(nv)]
+    eset = set()
+    for a, b in edges:
+        adj[a].add(b)
+        adj[b].add(a)
+        eset.add((min(a, b), max(a, b)))
+    n_edges = len(eset)
+    best: List[Optional[Code]] = [None]
+
+    def edge_used(used, a, b):
+        return (min(a, b), max(a, b)) in used
+
+    def rec(code, order, pos, used, rmpath):
+        # order: graph vertex per dfs id; pos: graph vertex -> dfs id
+        if len(code) == n_edges:
+            c = tuple(code)
+            if best[0] is None or code_key(c) < code_key(best[0]):
+                best[0] = c
+            return
+        if best[0] is not None and \
+                code_key(code) > code_key(best[0][:len(code)]):
+            return
+        right = order[-1]
+        # --- backward candidates from the rightmost vertex (smallest j wins)
+        back = sorted(
+            pos[v] for v in adj[right]
+            if v in pos and pos[v] < len(order) - 1
+            and not edge_used(used, right, v))
+        if back:
+            j = back[0]
+            v = order[j]
+            e = (len(order) - 1, j, vertex_labels[right], vertex_labels[v])
+            rec(code + [e], order, pos,
+                used | {(min(right, v), max(right, v))}, rmpath)
+            return
+        # --- forward candidates from the rightmost path, deepest first
+        for u_id in reversed(rmpath):
+            u = order[u_id]
+            cands = [wv for wv in adj[u]
+                     if wv not in pos and not edge_used(used, u, wv)]
+            if not cands:
+                continue
+            lmin = min(vertex_labels[wv] for wv in cands)
+            for wv in cands:
+                if vertex_labels[wv] != lmin:
+                    continue
+                e = (u_id, len(order), vertex_labels[u], vertex_labels[wv])
+                rec(code + [e], order + [wv], {**pos, wv: len(order)},
+                    used | {(min(u, wv), max(u, wv))},
+                    rmpath[:rmpath.index(u_id) + 1] + [len(order)])
+            return          # only the deepest rmpath vertex may extend
+        # disconnected remainder cannot happen for connected patterns
+
+    # initial edges: minimal (la, lb) first
+    lmin = min(min(vertex_labels[a], vertex_labels[b]) for a, b in eset)
+    for a, b in eset:
+        for u, v in ((a, b), (b, a)):
+            if vertex_labels[u] != lmin:
+                continue
+            code0 = [(0, 1, vertex_labels[u], vertex_labels[v])]
+            rec(code0, [u, v], {u: 0, v: 1}, {(min(u, v), max(u, v))}, [0, 1])
+    return best[0]
+
+
+def is_min_code(code: Code) -> bool:
+    nv = code_num_vertices(code)
+    labels = code_vertex_labels(code)
+    edges = [(i, j) for i, j, _, _ in code]
+    return min_dfs_code(labels, edges) == tuple(code)
+
+
+# ------------------------------------------------------------------ the group
+@dataclasses.dataclass
+class PatternGroup:
+    code: Code
+    embeddings: np.ndarray        # [E, nv] data vertices, column = dfs id
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.code)
+
+    def support(self) -> int:
+        """Minimum image-based support [5]: min over pattern vertices of the
+        number of distinct data vertices mapped to it."""
+        if len(self.embeddings) == 0:
+            return 0
+        return min(len(np.unique(self.embeddings[:, c]))
+                   for c in range(self.embeddings.shape[1]))
+
+
+# ------------------------------------------------- vectorized data-graph ops
+def _has_edge_vec(g: GraphStore, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+    adj = g.adj_bits
+    word = adj[u, v // 32]
+    return (word >> (v % 32).astype(np.uint32)) & 1 > 0
+
+
+def _gather_neighbors(g: GraphStore, vs: np.ndarray):
+    """All (row, neighbor) pairs for sources ``vs`` — fully vectorized CSR."""
+    counts = g.degrees[vs].astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int32))
+    rows = np.repeat(np.arange(len(vs), dtype=np.int64), counts)
+    starts = g.indptr[vs].astype(np.int64)
+    offset = np.arange(total, dtype=np.int64) - \
+        np.repeat(np.cumsum(counts) - counts, counts)
+    flat = g.indices[np.repeat(starts, counts) + offset]
+    return rows, flat
+
+
+def seed_groups(g: GraphStore) -> Dict[Code, PatternGroup]:
+    """All one-edge groups with minimal codes (paper Fig. 5 step 1):
+    one embedding per *directed* edge whose code ``(0,1,la,lb)`` is minimal
+    (``la <= lb``; both orientations when ``la == lb``)."""
+    assert g.labels is not None
+    ea = g.edge_array                       # both directions present
+    la = g.labels[ea[:, 0]]
+    lb = g.labels[ea[:, 1]]
+    keep = la <= lb
+    groups: Dict[Code, PatternGroup] = {}
+    for key in np.unique(np.stack([la[keep], lb[keep]], 1), axis=0):
+        m = keep & (la == key[0]) & (lb == key[1])
+        code = ((0, 1, int(key[0]), int(key[1])),)
+        groups[code] = PatternGroup(code, ea[m].astype(np.int32))
+    return groups
+
+
+def expand_group(g: GraphStore, group: PatternGroup
+                 ) -> Tuple[Dict[Code, PatternGroup], int]:
+    """Pattern-oriented expansion: extend every embedding by one
+    rightmost-path edge; child groups keyed by (minimal) code.
+
+    Returns (children, candidates_created) — the latter is the paper's cost
+    metric (embeddings materialized, pre minimality filtering).
+    """
+    code, emb = group.code, group.embeddings
+    nv = emb.shape[1]
+    rmpath = code_rightmost_path(code)
+    vlabels = code_vertex_labels(code)
+    p_adj = _pattern_adj(code)
+    right = rmpath[-1]
+    created = 0
+    children: Dict[Code, PatternGroup] = {}
+
+    def _add(child_code: Code, child_emb: np.ndarray):
+        nonlocal created
+        created += len(child_emb)
+        if len(child_emb) == 0 or not is_min_code(child_code):
+            return
+        child_emb = np.unique(child_emb, axis=0)
+        if child_code in children:
+            prev = children[child_code].embeddings
+            children[child_code] = PatternGroup(
+                child_code, np.unique(np.concatenate([prev, child_emb]), axis=0))
+        else:
+            children[child_code] = PatternGroup(child_code, child_emb)
+
+    # --- backward extensions: rightmost vertex -> earlier rmpath vertex
+    for j in rmpath[:-1]:
+        if j in p_adj[right]:
+            continue                       # edge already in the pattern
+        mask = _has_edge_vec(g, emb[:, right], emb[:, j])
+        child_code = tuple(code) + ((right, j, vlabels[right], vlabels[j]),)
+        _add(child_code, emb[mask])
+
+    # --- forward extensions from every rightmost-path vertex
+    for i in rmpath:
+        rows, nbr = _gather_neighbors(g, emb[:, i])
+        if len(rows) == 0:
+            continue
+        # exclude neighbors already used by the embedding
+        used = (emb[rows] == nbr[:, None]).any(axis=1)
+        rows, nbr = rows[~used], nbr[~used]
+        if len(rows) == 0:
+            continue
+        nl = g.labels[nbr]
+        for lw in np.unique(nl):
+            m = nl == lw
+            child_code = tuple(code) + ((i, nv, vlabels[i], int(lw)),)
+            child_emb = np.concatenate(
+                [emb[rows[m]], nbr[m, None].astype(np.int32)], axis=1)
+            _add(child_code, child_emb)
+
+    return children, created

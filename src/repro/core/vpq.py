@@ -1,0 +1,178 @@
+"""Virtual priority queue — the paper's on-disk subgraph management (§5).
+
+The device pool (HBM in production) holds the high-priority states; when it
+overflows, the lowest-priority entries exit the jitted step as a fixed-size
+block and are spilled here as **sorted runs** — exactly the paper's design:
+
+* spill creates a run sorted in decreasing priority ("stores the others on
+  disk in order of decreasing priority");
+* dequeue/refill performs a **buffered k-way merge** over run heads
+  (external-merge-sort style, "a small number of disk seeks"):
+  each run keeps an in-memory block buffer; a heap over buffer heads yields
+  the globally highest entries.
+
+Backends: ``host`` (numpy arrays in host DRAM — the HBM:DRAM ratio on a TPU
+host mirrors the paper's DRAM:disk ratio) and ``disk`` (memory-mapped ``.npy``
+runs with block reads — the literal reproduction used by
+``benchmarks/bench_vpq.py`` for Figure 19).
+
+Refill also applies **late dominance pruning**: entries whose stored upper
+bound has fallen below the current k-th-result threshold are dropped during
+the merge instead of being shipped back to the device.
+"""
+from __future__ import annotations
+
+import heapq
+import os
+import shutil
+import tempfile
+from typing import List, Optional
+
+import numpy as np
+
+NEG = np.iinfo(np.int32).min
+
+
+class _Run:
+    """One sorted spill run with buffered sequential reads."""
+
+    def __init__(self, states, prio, ub, backend: str, spill_dir: str,
+                 run_id: int, buffer_size: int):
+        self.n = len(prio)
+        self.cursor = 0
+        self.buffer_size = buffer_size
+        self._buf_start = 0
+        if backend == "disk":
+            self._paths = {}
+            for name, arr in (("states", states), ("prio", prio), ("ub", ub)):
+                path = os.path.join(spill_dir, f"run{run_id}_{name}.npy")
+                np.save(path, arr)
+                self._paths[name] = path
+            self._states = np.load(self._paths["states"], mmap_mode="r")
+            self._prio = np.load(self._paths["prio"], mmap_mode="r")
+            self._ub = np.load(self._paths["ub"], mmap_mode="r")
+        else:
+            self._paths = None
+            self._states, self._prio, self._ub = states, prio, ub
+        self._fill_buffer()
+
+    def _fill_buffer(self):
+        s, e = self.cursor, min(self.cursor + self.buffer_size, self.n)
+        self._buf_start = s
+        # one sequential block read per refill (the paper's buffering)
+        self._bstates = np.array(self._states[s:e])
+        self._bprio = np.array(self._prio[s:e])
+        self._bub = np.array(self._ub[s:e])
+
+    def head_prio(self) -> int:
+        return int(self._bprio[self.cursor - self._buf_start])
+
+    def pop(self):
+        i = self.cursor - self._buf_start
+        out = (self._bstates[i], int(self._bprio[i]), int(self._bub[i]))
+        self.cursor += 1
+        if self.cursor < self.n and self.cursor - self._buf_start >= \
+                len(self._bprio):
+            self._fill_buffer()
+        return out
+
+    @property
+    def exhausted(self) -> bool:
+        return self.cursor >= self.n
+
+    def close(self):
+        if self._paths:
+            for p in self._paths.values():
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass
+
+
+class VirtualPriorityQueue:
+    def __init__(self, state_width: int, backend: str = "host",
+                 spill_dir: Optional[str] = None,
+                 buffer_size: int = 8192,
+                 run_flush_size: int = 1 << 15):
+        assert backend in ("host", "disk", "none")
+        self.state_width = state_width
+        self.backend = backend
+        self.buffer_size = buffer_size
+        self.run_flush_size = run_flush_size
+        self.runs: List[_Run] = []
+        self._pending: List[tuple] = []   # (states, prio, ub) awaiting a run
+        self._pending_n = 0
+        self._run_id = 0
+        self.total_spilled = 0
+        self._own_dir = spill_dir is None and backend == "disk"
+        self.spill_dir = (tempfile.mkdtemp(prefix="nuri_vpq_")
+                          if self._own_dir else spill_dir)
+        if backend == "disk" and not self._own_dir:
+            os.makedirs(self.spill_dir, exist_ok=True)
+
+    def __len__(self) -> int:
+        return self._pending_n + sum(r.n - r.cursor for r in self.runs)
+
+    # ------------------------------------------------------------------ push
+    def maybe_push(self, states: np.ndarray, prio: np.ndarray,
+                   ub: np.ndarray):
+        """Spill the valid (prio > NEG) entries of an overflow block."""
+        mask = prio > NEG
+        if not mask.any():
+            return
+        if self.backend == "none":
+            raise RuntimeError(
+                "priority pool overflow with spill disabled; raise "
+                "pool_capacity or enable the virtual priority queue")
+        states, prio, ub = states[mask], prio[mask], ub[mask]
+        self.total_spilled += len(prio)
+        self._pending.append((states, prio, ub))
+        self._pending_n += len(prio)
+        if self._pending_n >= self.run_flush_size:
+            self._flush_pending()
+
+    def _flush_pending(self):
+        if not self._pending:
+            return
+        states = np.concatenate([p[0] for p in self._pending])
+        prio = np.concatenate([p[1] for p in self._pending])
+        ub = np.concatenate([p[2] for p in self._pending])
+        order = np.argsort(prio, kind="stable")[::-1]  # decreasing priority
+        self.runs.append(_Run(
+            np.ascontiguousarray(states[order]), prio[order], ub[order],
+            self.backend, self.spill_dir, self._run_id, self.buffer_size))
+        self._run_id += 1
+        self._pending, self._pending_n = [], 0
+
+    # ------------------------------------------------------------------- pop
+    def pop_chunk(self, n: int, min_ub: int = NEG):
+        """Return the globally top-``n`` spilled entries (k-way run merge),
+        dropping entries whose upper bound is dominated by ``min_ub``."""
+        self._flush_pending()
+        heap = []
+        for i, r in enumerate(self.runs):
+            if not r.exhausted:
+                heapq.heappush(heap, (-r.head_prio(), i))
+        out_s, out_p, out_u = [], [], []
+        while heap and len(out_p) < n:
+            _, i = heapq.heappop(heap)
+            state, p, u = self.runs[i].pop()
+            if u >= min_ub:                      # late dominance pruning
+                out_s.append(state)
+                out_p.append(p)
+                out_u.append(u)
+            if not self.runs[i].exhausted:
+                heapq.heappush(heap, (-self.runs[i].head_prio(), i))
+        self.runs = [r for r in self.runs if not r.exhausted] or []
+        if not out_p:
+            return (np.zeros((0, self.state_width), np.int32),
+                    np.zeros((0,), np.int32), np.zeros((0,), np.int32))
+        return (np.stack(out_s).astype(np.int32),
+                np.asarray(out_p, np.int32), np.asarray(out_u, np.int32))
+
+    def close(self):
+        for r in self.runs:
+            r.close()
+        self.runs = []
+        if self._own_dir and self.spill_dir and os.path.isdir(self.spill_dir):
+            shutil.rmtree(self.spill_dir, ignore_errors=True)

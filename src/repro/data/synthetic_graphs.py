@@ -1,0 +1,76 @@
+"""Synthetic data graphs for benchmarks and tests.
+
+The paper evaluates on Email/CiteSeer/MiCo/YouTube/Patents; those files are
+not available offline, so benchmarks use synthetic stand-ins with the same
+relevant structure:
+
+* :func:`densifying_graph` — the paper's densification protocol (§6.2):
+  "created increasingly denser data graphs ... by repeatedly adding batches
+  of randomly chosen edges to an empty graph".
+* :func:`planted_clique_graph` — ER background + planted clique (lets tests
+  assert the known maximum clique).
+* :func:`powerlaw_graph` — preferential-attachment for skew-degree behavior.
+* :func:`labeled_graph` — ER with vertex labels (CiteSeer-like) for pattern
+  mining / isomorphism.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import GraphStore
+
+
+def densifying_graph(n: int, m: int, seed: int = 0) -> GraphStore:
+    """n vertices, m random distinct undirected edges (paper §6.2 protocol)."""
+    rng = np.random.default_rng(seed)
+    seen = set()
+    edges = []
+    while len(edges) < m:
+        need = m - len(edges)
+        cand = rng.integers(0, n, size=(need * 2 + 16, 2))
+        for u, v in cand:
+            if u == v:
+                continue
+            key = (min(u, v), max(u, v))
+            if key in seen:
+                continue
+            seen.add(key)
+            edges.append(key)
+            if len(edges) == m:
+                break
+    return GraphStore.from_edges(n, np.array(edges))
+
+
+def planted_clique_graph(n: int, m: int, clique_size: int,
+                         seed: int = 0) -> GraphStore:
+    """ER(n, m) plus a planted clique on ``clique_size`` random vertices."""
+    rng = np.random.default_rng(seed)
+    g = densifying_graph(n, m, seed)
+    members = rng.choice(n, size=clique_size, replace=False)
+    extra = [(u, v) for i, u in enumerate(members) for v in members[i + 1:]]
+    edges = np.concatenate([g.edge_array, np.array(extra, np.int32)])
+    return GraphStore.from_edges(n, edges)
+
+
+def powerlaw_graph(n: int, m_per_node: int, seed: int = 0) -> GraphStore:
+    """Barabási–Albert preferential attachment."""
+    rng = np.random.default_rng(seed)
+    edges = []
+    targets = list(range(m_per_node))
+    repeated = []
+    for v in range(m_per_node, n):
+        for t in targets:
+            edges.append((v, t))
+        repeated.extend(targets)
+        repeated.extend([v] * m_per_node)
+        targets = [repeated[i] for i in
+                   rng.integers(0, len(repeated), size=m_per_node)]
+    return GraphStore.from_edges(n, np.array(edges))
+
+
+def labeled_graph(n: int, m: int, n_labels: int, seed: int = 0) -> GraphStore:
+    """ER(n, m) with uniform random vertex labels."""
+    rng = np.random.default_rng(seed + 1)
+    g = densifying_graph(n, m, seed)
+    labels = rng.integers(0, n_labels, size=n).astype(np.int32)
+    return GraphStore.from_edges(n, g.edge_array, labels=labels)

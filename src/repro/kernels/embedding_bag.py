@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: recsys embedding lookup (EmbeddingBag's gather half).
+
+JAX has no ``nn.EmbeddingBag``; the wide-deep hot path is a per-field
+gather from huge tables.  TPU mapping: the grid iterates (batch-tile,
+field); ids are **scalar-prefetched** so the BlockSpec ``index_map`` itself
+selects which table row block to DMA — the canonical TPU embedding pattern
+(the row fetch is issued by the pipeline, not by in-kernel control flow).
+One grid step copies the ``[1, D]`` row of ``table[f, ids[b, f]]`` into the
+output tile; the multi-hot "bag" reduction composes with
+:mod:`repro.kernels.segment_matmul`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, table_ref, out_ref):
+    out_ref[...] = table_ref[...]        # row already selected by index_map
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  interpret: bool = True) -> jnp.ndarray:
+    """table: [F, V, D]; ids: [B, F] int32 → [B, F*D] fp32.
+
+    Grid (B, F); the table BlockSpec's index_map reads the prefetched ids to
+    pick (field, row); the output BlockSpec places the row at (b, f).
+    """
+    f, v, d = table.shape
+    b, f2 = ids.shape
+    assert f == f2
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, f),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, j, ids: (j, ids[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j, ids: (i, j, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, f, d), table.dtype),
+        interpret=interpret,
+    )(ids, table)
+    return out.reshape(b, f * d).astype(jnp.float32)

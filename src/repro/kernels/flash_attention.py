@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: causal flash attention (LM training/prefill hot spot).
+
+Online-softmax over KV tiles with running (max, denom, acc) carried in VMEM
+scratch; the [S, S] score matrix never exists.  Grid (head, q-tile,
+kv-tile) with kv innermost so the scratch carries across the reduction
+axis; causal tiles above the diagonal contribute nothing (masked; a
+production refinement skips them via grid remapping — noted in
+EXPERIMENTS.md §Perf).
+
+q/k/v are [H, S, D] (the ops wrapper folds batch and GQA groups into H);
+MXU-aligned tiles: q-tile 128×D, kv-tile 128×D.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+            block_q, block_k, scale, causal):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # [bQ, D]
+    k = k_ref[0]                                   # [bK, D]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qp = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kp = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(qp >= kp, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q/k/v: [H, S, D] → [H, S, D] fp32."""
+    h, s, d = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    scale = 1.0 / (d ** 0.5)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, block_q=bq, block_k=bk, scale=scale,
+                          causal=causal),
+        grid=(h, s // bq, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hi, qi, ki: (hi, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda hi, qi, ki: (hi, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda hi, qi, ki: (hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda hi, qi, ki: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denom
+            pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

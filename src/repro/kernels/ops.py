@@ -1,0 +1,42 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container kernels run under ``interpret=True`` (Pallas executes
+the kernel body in Python per grid step — bitwise-identical semantics);
+on TPU set ``REPRO_PALLAS_COMPILE=1`` to lower them for real.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from .embedding_bag import embedding_bag as _embedding_bag
+from .flash_attention import flash_attention as _flash_attention
+from .frontier_expand import frontier_expand as _frontier_expand
+from .segment_matmul import segment_matmul as _segment_matmul
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def frontier_expand(p_bits, ext_bits, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _frontier_expand(p_bits, ext_bits, **kw)
+
+
+def segment_matmul(messages, dst, num_nodes, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _segment_matmul(messages, dst, num_nodes=num_nodes, **kw)
+
+
+def embedding_bag(table, ids, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _embedding_bag(table, ids, **kw)
+
+
+def flash_attention(q, k, v, causal=True, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _flash_attention(q, k, v, causal=causal, **kw)

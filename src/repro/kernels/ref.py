@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``<name>`` in this package has ``ref.<name>_ref`` with identical
+signature/semantics; kernel tests sweep shapes/dtypes and assert_allclose
+against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def frontier_expand_ref(p_bits: jnp.ndarray, ext_bits: jnp.ndarray):
+    """counts[b, v] = popcount(p_bits[b] & ext_bits[v]).
+
+    p_bits: [B, W] uint32 candidate bitsets; ext_bits: [N, W] uint32
+    (adjacency ∩ {u > v} masks).  Returns [B, N] int32.
+    """
+    inter = p_bits[:, None, :] & ext_bits[None, :, :]
+    return jnp.sum(jax.lax.population_count(inter).astype(jnp.int32),
+                   axis=-1)
+
+
+def segment_matmul_ref(messages: jnp.ndarray, dst: jnp.ndarray,
+                       num_nodes: int):
+    """out[n] = Σ_{e: dst[e]==n} messages[e].  messages: [E, D]; dst: [E]."""
+    return jax.ops.segment_sum(messages.astype(jnp.float32), dst,
+                               num_segments=num_nodes)
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray):
+    """table: [F, V, D]; ids: [B, F] → [B, F*D] (per-field gather concat)."""
+    b, f = ids.shape
+    emb = table[jnp.arange(f)[None, :], ids]        # [B, F, D]
+    return emb.reshape(b, -1)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True):
+    """q/k/v: [H, S, D] → [H, S, D] (fp32 softmax attention)."""
+    h, s, d = q.shape
+    scores = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))

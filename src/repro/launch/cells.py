@@ -1,0 +1,453 @@
+"""Cell builders: one jit-able program per (architecture × input shape).
+
+A *cell* bundles the step function, abstract argument shapes
+(ShapeDtypeStruct — never allocated), and input shardings for a given mesh.
+``launch/dryrun.py`` lowers and compiles these; ``launch/train.py`` runs
+the reduced versions with real arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import Arch, ShapeSpec
+from repro.models.sharding import LM_RULES, resolve
+from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
+                               opt_state_shapes)
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellProgram:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]            # pytrees of ShapeDtypeStruct
+    in_shardings: Tuple[Any, ...]    # matching pytrees of NamedSharding
+    donate: Tuple[int, ...] = ()
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       donate_argnums=self.donate)
+
+    def lower(self):
+        return self.jit().lower(*self.args)
+
+
+def _ns(mesh: Mesh, tree_of_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _mesh_div(mesh: Mesh, want: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in want if a in mesh.shape]))
+
+
+def _axes_for(mesh: Mesh, want: Tuple[str, ...], dim: int):
+    """Largest prefix of ``want`` (axes present in mesh) that divides dim."""
+    axes = tuple(a for a in want if a in mesh.shape)
+    while axes and dim % int(np.prod([mesh.shape[a] for a in axes])) != 0:
+        axes = axes[:-1]
+    return axes or None
+
+
+def _spec0(mesh, want, shape):
+    return P(_axes_for(mesh, want, shape[0]),
+             *([None] * (len(shape) - 1)))
+
+
+# ======================================================================
+# LM cells
+# ======================================================================
+def build_lm_cell(arch: Arch, shape: ShapeSpec, mesh: Mesh) -> CellProgram:
+    from repro.models import transformer as T
+    cfg = arch.make_model_cfg(shape)
+    rules = dict(LM_RULES)
+    if arch.name == "arctic-480b":
+        from repro.configs.arctic_480b import SHARDING_OVERRIDES
+        rules.update(SHARDING_OVERRIDES)
+    if cfg.moe is not None:
+        s_ = shape.sizes
+        if shape.kind in ("train", "prefill"):
+            nmb_ = s_.get("grad_microbatches", 8) if shape.kind == "train" \
+                else 1
+            t_call = (s_["global_batch"] * s_["seq_len"] // nmb_ //
+                      cfg.moe.token_chunks)
+        else:
+            t_call = s_["global_batch"]
+        from repro.models.moe import capacity as _cap
+        cap = _cap(t_call, cfg.moe)
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe,
+            experts_shard=_axes_for(mesh, ("model",), cfg.moe.num_experts),
+            capacity_shard=_axes_for(mesh, ("pod", "data"), cap)))
+
+    pshapes = T.param_shapes(cfg)
+    pspecs = T.param_specs(cfg, mesh, rules)
+    p_sh = _ns(mesh, pspecs)
+    s = shape.sizes
+    b = s["global_batch"]
+
+    if shape.kind == "train":
+        seq = s["seq_len"]
+        oshapes = opt_state_shapes(pshapes)
+        ospecs = {"mu": pspecs, "nu": jax.tree.map(lambda x: x, pspecs),
+                  "step": P()}
+        o_sh = _ns(mesh, ospecs)
+        bshapes = {"tokens": SDS((b, seq), jnp.int32),
+                   "targets": SDS((b, seq), jnp.int32)}
+        bspec = P(_axes_for(mesh, ("pod", "data"), b), None)
+        b_sh = {k: NamedSharding(mesh, bspec) for k in bshapes}
+        opt_cfg = AdamWConfig()
+        # gradient accumulation: activations scale 1/nmb (42 saved layer
+        # residuals dominated gemma2's 66 GiB/dev), grads use one buffer
+        nmb = s.get("grad_microbatches", 8)
+        if b % nmb or (b // nmb) % _mesh_div(mesh, ("pod", "data")):
+            nmb = 1
+
+        def grad_fn(params, toks, tgts):
+            return jax.value_and_grad(
+                lambda p: T.lm_loss(cfg, p, toks, tgts))(params)
+
+        def fn(params, opt, batch):
+            if nmb == 1:
+                loss, grads = grad_fn(params, batch["tokens"],
+                                      batch["targets"])
+            else:
+                # microbatch split keeps the SHARDED batch dim leading
+                # ([mb, nmb, S], slice dim 1) — reshaping to [nmb, mb, S]
+                # puts a non-divisible dim on the data axis and GSPMD
+                # silently replicates the whole batch (measured: no
+                # memory win at all).
+                mb = b // nmb
+                toks = batch["tokens"].reshape(mb, nmb, seq)
+                tgts = batch["targets"].reshape(mb, nmb, seq)
+
+                def body(i, acc):
+                    tk = jax.lax.dynamic_slice_in_dim(toks, i, 1, 1)[:, 0]
+                    tg = jax.lax.dynamic_slice_in_dim(tgts, i, 1, 1)[:, 0]
+                    l, g = grad_fn(params, tk, tg)
+                    return (acc[0] + l, jax.tree.map(jnp.add, acc[1], g))
+
+                zero = (jnp.zeros((), jnp.float32),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape,
+                                                         jnp.float32),
+                                     params))
+                loss_sum, grads = jax.lax.fori_loop(0, nmb, body, zero)
+                loss = loss_sum / nmb
+                grads = jax.tree.map(lambda g: g / nmb, grads)
+            params, opt, metrics = adamw_update(opt_cfg, params, grads, opt)
+            metrics["loss"] = loss
+            return params, opt, metrics
+
+        return CellProgram(
+            name=f"{arch.name}__{shape.name}", fn=fn,
+            args=(pshapes, oshapes, bshapes),
+            in_shardings=(p_sh, o_sh, b_sh), donate=(0, 1),
+            meta=dict(kind="train", tokens=b * seq,
+                      params=cfg.param_count(),
+                      active_params=cfg.active_param_count()))
+
+    if shape.kind == "prefill":
+        seq = s["seq_len"]
+        tshape = SDS((b, seq), jnp.int32)
+        tspec = NamedSharding(
+            mesh, P(_axes_for(mesh, ("pod", "data"), b), None))
+
+        def fn(params, tokens):
+            return T.prefill(cfg, params, tokens)
+
+        return CellProgram(
+            name=f"{arch.name}__{shape.name}", fn=fn,
+            args=(pshapes, tshape), in_shardings=(p_sh, tspec),
+            meta=dict(kind="prefill", tokens=b * seq,
+                      params=cfg.param_count(),
+                      active_params=cfg.active_param_count()))
+
+    # decode.  The cache shards over (batch, head_dim) — NEVER the sequence
+    # axis: a traced-position dynamic-update-slice on a sharded dim makes
+    # GSPMD all-gather the whole cache (measured 165 GiB/dev on arctic).
+    # head_dim is 16-divisible for every assigned arch; attention contracts
+    # it, costing one small score all-reduce per layer instead.
+    seq = s["seq_len"]
+    cache_shapes = T.make_cache_shapes(cfg, b, seq)
+    if b == 1:      # long_500k: every axis onto head_dim
+        cspec = P(None, None, None, None,
+                  _axes_for(mesh, ("pod", "data", "model"), cfg.head_dim))
+    else:
+        cspec = P(None, _axes_for(mesh, ("pod", "data"), b), None, None,
+                  _axes_for(mesh, ("model",), cfg.head_dim))
+    c_sh = {k: NamedSharding(mesh, cspec) for k in cache_shapes}
+    tshape = SDS((b,), jnp.int32)
+    tspec = NamedSharding(mesh, P(_axes_for(mesh, ("pod", "data"), b)))
+    posshape = SDS((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+
+    def fn(params, cache, tokens, position):
+        return T.decode_step(cfg, params, cache, tokens, position)
+
+    return CellProgram(
+        name=f"{arch.name}__{shape.name}", fn=fn,
+        args=(pshapes, cache_shapes, tshape, posshape),
+        in_shardings=(p_sh, c_sh, tspec, pos_sh), donate=(1,),
+        meta=dict(kind="decode", tokens=b,
+                  params=cfg.param_count(),
+                  active_params=cfg.active_param_count(),
+                  kv_len=seq))
+
+
+# ======================================================================
+# GNN cells
+# ======================================================================
+_GNN_FNS = {}
+
+
+def _gnn_model(arch_name: str):
+    if not _GNN_FNS:
+        from repro.models import equivariant as E, gnn as G
+        _GNN_FNS.update({
+            "schnet": (G.schnet_param_shapes, G.schnet_forward),
+            "graphcast": (G.graphcast_param_shapes, G.graphcast_forward),
+            "mace": (E.mace_param_shapes, E.mace_forward),
+            "equiformer-v2": (E.equiformer_param_shapes,
+                              E.equiformer_forward),
+        })
+    return _GNN_FNS[arch_name]
+
+
+def build_gnn_cell(arch: Arch, shape: ShapeSpec, mesh: Mesh) -> CellProgram:
+    from repro.models.gnn import gnn_loss
+    s = shape.sizes
+    n, e = s["n_nodes"], s["n_edges"]
+    # nodes over (pod, data); hidden channels over model — node-axis
+    # sharding over 'model' too made every edge-chunk gather all-gather the
+    # full feature tensor (equiformer/ogb: 3.7e3 s collective term)
+    node_axes = _axes_for(mesh, ("pod", "data"), n)
+    edge_axes = _axes_for(mesh, ("pod", "data", "model"),
+                          e // s["edge_chunks"])
+    cfg0 = arch.make_model_cfg(shape)
+    # channels stay UNSHARDED (E6 refuted: channel-sharded node tensors vs
+    # edge-sharded message tensors re-trigger GSPMD involuntary full
+    # rematerialization, collective term 223 s -> 1670 s); per-edge tensors
+    # are edge-sharded via the pre-chunked [nc, chunk] inputs
+    cfg = dataclasses.replace(cfg0, node_shard=node_axes, feat_shard=None)
+
+    shapes_fn, forward = _gnn_model(arch.name)
+    pshapes = shapes_fn(cfg)
+    pspecs = jax.tree.map(lambda x: P(), pshapes)    # GNN weights replicated
+    p_sh = _ns(mesh, pspecs)
+    oshapes = opt_state_shapes(pshapes)
+    o_sh = _ns(mesh, {"mu": pspecs, "nu": jax.tree.map(lambda x: x, pspecs),
+                      "step": P()})
+
+    node_sp = P(node_axes, None)
+    nc_ = s["edge_chunks"]
+    edge_sp = P(None, edge_axes)       # pre-chunked [nc, chunk]
+    bshapes = {
+        "features": SDS((n, s["d_feat"]), jnp.float32),
+        "positions": SDS((n, 3), jnp.float32),
+        "edge_src": SDS((nc_, e // nc_), jnp.int32),
+        "edge_dst": SDS((nc_, e // nc_), jnp.int32),
+    }
+    bspecs = {
+        "features": node_sp, "positions": node_sp,
+        "edge_src": edge_sp, "edge_dst": edge_sp,
+    }
+    static = {}
+    if s.get("batch_graphs"):
+        g = s["batch_graphs"]
+        bshapes["graph_ids"] = SDS((n,), jnp.int32)
+        bspecs["graph_ids"] = P(node_axes)
+        bshapes["targets"] = SDS((g, s["d_out"]), jnp.float32)
+        bspecs["targets"] = P(None, None)
+        static["num_graphs"] = g
+    else:
+        bshapes["targets"] = SDS((n, s["d_out"]), jnp.float32)
+        bspecs["targets"] = node_sp
+        if s.get("sampled"):
+            bshapes["node_mask"] = SDS((n,), jnp.float32)
+            bspecs["node_mask"] = P(node_axes)
+    b_sh = _ns(mesh, bspecs)
+    opt_cfg = AdamWConfig()
+
+    def fn(params, opt, batch):
+        full = {**batch, **static}
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn_loss(forward, cfg, p, full))(params)
+        params, opt, metrics = adamw_update(opt_cfg, params, grads, opt)
+        metrics["loss"] = loss
+        return params, opt, metrics
+
+    nparams = int(sum(np.prod(x.shape) for x in jax.tree.leaves(pshapes)))
+    return CellProgram(
+        name=f"{arch.name}__{shape.name}", fn=fn,
+        args=(pshapes, oshapes, bshapes),
+        in_shardings=(p_sh, o_sh, b_sh), donate=(0, 1),
+        meta=dict(kind="train", nodes=n, edges=e, params=nparams,
+                  active_params=nparams))
+
+
+# ======================================================================
+# recsys cells
+# ======================================================================
+def build_recsys_cell(arch: Arch, shape: ShapeSpec, mesh: Mesh) -> CellProgram:
+    from repro.models import recsys as R
+    cfg = arch.make_model_cfg(shape)
+    pshapes = R.widedeep_param_shapes(cfg)
+    pspecs = R.widedeep_param_specs(cfg, mesh)
+    p_sh = _ns(mesh, pspecs)
+    s = shape.sizes
+    nparams = int(sum(np.prod(x.shape) for x in jax.tree.leaves(pshapes)))
+    # embedding tables are gathered (O(F·D) per example), not matmul'd:
+    # MODEL_FLOPS counts the dense MLP + per-example embedding rows
+    mlp_params = int(sum(np.prod(v.shape) for k, v in pshapes.items()
+                         if k.startswith("mlp"))) + \
+        cfg.n_sparse * cfg.embed_dim
+
+    if shape.kind == "train":
+        b = s["batch"]
+        oshapes = opt_state_shapes(pshapes)
+        o_sh = _ns(mesh, {"mu": pspecs,
+                          "nu": jax.tree.map(lambda x: x, pspecs),
+                          "step": P()})
+        baxes = _axes_for(mesh, ("pod", "data"), b)
+        bshapes = {"sparse_ids": SDS((b, cfg.n_sparse), jnp.int32),
+                   "dense": SDS((b, cfg.n_dense), jnp.float32),
+                   "labels": SDS((b,), jnp.float32)}
+        b_sh = _ns(mesh, {"sparse_ids": P(baxes, None),
+                          "dense": P(baxes, None), "labels": P(baxes)})
+        opt_cfg = AdamWConfig()
+
+        def fn(params, opt, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: R.widedeep_loss(cfg, p, batch))(params)
+            params, opt, metrics = adamw_update(opt_cfg, params, grads, opt)
+            metrics["loss"] = loss
+            return params, opt, metrics
+
+        return CellProgram(
+            name=f"{arch.name}__{shape.name}", fn=fn,
+            args=(pshapes, oshapes, bshapes),
+            in_shardings=(p_sh, o_sh, b_sh), donate=(0, 1),
+            meta=dict(kind="train", batch=b, params=nparams,
+                      active_params=mlp_params))
+
+    if shape.kind == "serve":
+        b = s["batch"]
+        baxes = _axes_for(mesh, ("pod", "data", "model") if b >= 4096
+                          else ("pod", "data"), b)
+        bshapes = {"sparse_ids": SDS((b, cfg.n_sparse), jnp.int32),
+                   "dense": SDS((b, cfg.n_dense), jnp.float32)}
+        b_sh = _ns(mesh, {"sparse_ids": P(baxes, None),
+                          "dense": P(baxes, None)})
+
+        def fn(params, batch):
+            return R.widedeep_serve(cfg, params, batch)
+
+        return CellProgram(
+            name=f"{arch.name}__{shape.name}", fn=fn,
+            args=(pshapes, bshapes), in_shardings=(p_sh, b_sh),
+            meta=dict(kind="serve", batch=b, params=nparams,
+                      active_params=mlp_params))
+
+    # retrieval
+    c = s["n_candidates"]
+    caxes = _axes_for(mesh, ("pod", "data", "model"), c)
+    dshape = SDS((1, cfg.n_dense), jnp.float32)
+    ishape = SDS((1, cfg.n_sparse), jnp.int32)
+    cshape = SDS((c,), jnp.int32)
+
+    def fn(params, dense, base_ids, cand_ids):
+        return R.widedeep_retrieval_fast(cfg, params, dense, base_ids,
+                                         cand_ids)
+
+    return CellProgram(
+        name=f"{arch.name}__{shape.name}", fn=fn,
+        args=(pshapes, dshape, ishape, cshape),
+        in_shardings=(p_sh, NamedSharding(mesh, P(None, None)),
+                      NamedSharding(mesh, P(None, None)),
+                      NamedSharding(mesh, P(caxes))),
+        meta=dict(kind="retrieval", candidates=c, params=nparams,
+                  active_params=mlp_params))
+
+
+def build_cell(arch: Arch, shape_name: str, mesh: Mesh) -> CellProgram:
+    shape = arch.shapes[shape_name]
+    if arch.family == "lm":
+        return build_lm_cell(arch, shape, mesh)
+    if arch.family == "gnn":
+        return build_gnn_cell(arch, shape, mesh)
+    return build_recsys_cell(arch, shape, mesh)
+
+
+# ======================================================================
+# cost probes
+# ======================================================================
+# XLA's cost_analysis counts a while/scan body ONCE (trip count is opaque),
+# so chunked/scanned cells under-report FLOPs.  Probes rebuild the cell with
+# n_layers = L' and all chunking disabled (chunking never changes matmul
+# totals — online-softmax rescales and capacity rounding are noise), then
+# the driver extrapolates affinely:
+#     total(L) = f(L1) + (L - L1) * (f(L2) - f(L1)) / (L2 - L1)
+# Decode / serve / retrieval cells have no scans (decode unrolls layers in
+# Python) → exact without probes.
+
+def probe_layer_counts(arch: Arch, shape: ShapeSpec):
+    """(L1, L2, L_full) for the affine probe, or None when exact."""
+    if arch.family == "lm":
+        if shape.kind == "decode":
+            return None
+        l_full = arch.make_model_cfg(shape).n_layers
+        return (2, 4, l_full)       # pairs keep gemma2's local/global mix
+    if arch.family == "gnn":
+        cfg = arch.make_model_cfg(shape)
+        l_full = getattr(cfg, "n_layers", None) or cfg.n_interactions
+        return (1, 2, l_full)
+    return None                      # recsys: no scans
+
+
+def build_probe_cell(arch: Arch, shape_name: str, mesh: Mesh,
+                     n_layers: int,
+                     n_edges: Optional[int] = None) -> CellProgram:
+    """Probe variant: L layers, all chunking disabled (single-trip HLO, so
+    cost_analysis is exact); GNN probes may also shrink the edge count for
+    the 4-point (layers × edges) fit."""
+    shape = arch.shapes[shape_name]
+    if arch.family == "lm":
+        base_make = arch.make_model_cfg
+        shape = dataclasses.replace(
+            shape, sizes={**shape.sizes, "grad_microbatches": 1})
+
+        def make_probe(sh):
+            cfg = base_make(sh)
+            seq = sh.sizes["seq_len"]
+            moe = (dataclasses.replace(cfg.moe, token_chunks=1)
+                   if cfg.moe else None)
+            return dataclasses.replace(
+                cfg, n_layers=n_layers, q_chunk=seq, kv_chunk=seq,
+                loss_chunk=seq, moe=moe, unroll_layers=True)
+
+        probe_arch = dataclasses.replace(arch, make_model_cfg=make_probe)
+        return build_lm_cell(probe_arch, shape, mesh)
+
+    base_make = arch.make_model_cfg
+    if n_edges is not None:
+        shape = dataclasses.replace(
+            shape, sizes={**shape.sizes, "n_edges": n_edges,
+                          "edge_chunks": 1})
+
+    def make_probe(sh):
+        cfg = base_make(sh)
+        field = ("n_interactions" if hasattr(cfg, "n_interactions")
+                 else "n_layers")
+        return dataclasses.replace(cfg, **{field: n_layers,
+                                           "edge_chunks": 1})
+
+    probe_arch = dataclasses.replace(arch, make_model_cfg=make_probe)
+    return build_gnn_cell(probe_arch, shape, mesh)

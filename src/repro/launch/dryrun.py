@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not set this flag globally — smoke tests and
+# benchmarks must see 1 device.
+
+"""Multi-pod dry-run: ``lower().compile()`` every (architecture × input
+shape) cell on the production meshes and record the compiled artifacts'
+memory/cost/collective profile.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi    # 2-pod only
+
+Artifacts: ``artifacts/dryrun/<mesh>/<arch>__<shape>.json`` with per-device
+HLO FLOPs, bytes accessed, peak memory, and collective bytes by op type —
+the inputs to :mod:`repro.analysis.roofline`.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_TYPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|"
+                      r"u8|pred)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _BYTES.get(dtype, 1 if dtype.startswith("f8") else 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum *operand* bytes of every collective op in the partitioned HLO.
+
+    Each HLO instruction line prints operand types inline, e.g.
+    ``x = f32[2048,128] all-gather(f32[128,128] y), ...`` — the first typed
+    shape is the result, the rest are operands.
+    """
+    out = {}
+    done_ops = 0
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if f"{kind}-done" in line:
+            done_ops += 1
+            continue                      # operand counted at -start
+        shapes = _TYPE_RE.findall(line)
+        if not shapes:
+            continue
+        operands = shapes[1:] or shapes   # skip result shape
+        nbytes = sum(_shape_bytes(t, d) for t, d in operands)
+        d = out.setdefault(kind, {"count": 0, "operand_bytes": 0})
+        d["count"] += 1
+        d["operand_bytes"] += nbytes
+    return out
+
+
+def _measure(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    return dict(
+        flops=float(ca.get("flops", 0.0)),
+        transcendentals=float(ca.get("transcendentals", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        collectives=parse_collective_bytes(compiled.as_text()),
+    )
+
+
+def _extrapolate(p1: dict, p2: dict, l1: int, l2: int, l_full: int) -> dict:
+    """Affine trip-count correction: total(L) = f(l1) + (L-l1)·Δ/(l2-l1)."""
+    def lin(a, b):
+        per = (b - a) / (l2 - l1)
+        return max(0.0, a + (l_full - l1) * per)
+
+    out = dict(
+        flops=lin(p1["flops"], p2["flops"]),
+        transcendentals=lin(p1["transcendentals"], p2["transcendentals"]),
+        bytes_accessed=lin(p1["bytes_accessed"], p2["bytes_accessed"]),
+    )
+    colls = {}
+    kinds = set(p1["collectives"]) | set(p2["collectives"])
+    for k in kinds:
+        a = p1["collectives"].get(k, {"count": 0, "operand_bytes": 0})
+        b = p2["collectives"].get(k, {"count": 0, "operand_bytes": 0})
+        colls[k] = dict(
+            count=int(round(lin(a["count"], b["count"]))),
+            operand_bytes=int(lin(a["operand_bytes"], b["operand_bytes"])))
+    out["collectives"] = colls
+    return out
+
+
+def _fit_layers_edges(m: dict, l1: int, l2: int, ep: int,
+                      l_full: int, e_full: int) -> dict:
+    """Solve f(L,E) = a0 + a1·E + L·c + L·d·E from 4 probe points and
+    evaluate at (l_full, e_full)."""
+    dl = l2 - l1
+
+    def fit(g):
+        f11, f21 = g(m[(l1, ep)]), g(m[(l2, ep)])
+        f12, f22 = g(m[(l1, 2 * ep)]), g(m[(l2, 2 * ep)])
+        d = (f22 - f21 - f12 + f11) / (ep * dl)
+        c = (f21 - f11) / dl - d * ep
+        a1 = (f12 - f11) / ep - l1 * d
+        a0 = f11 - a1 * ep - l1 * c - l1 * d * ep
+        return max(0.0, a0 + a1 * e_full + l_full * (c + d * e_full))
+
+    out = {k: fit(lambda x, _k=k: x[_k])
+           for k in ("flops", "transcendentals", "bytes_accessed")}
+    kinds = set()
+    for mm_ in m.values():
+        kinds |= set(mm_["collectives"])
+    colls = {}
+    for k in kinds:
+        def g_bytes(x, _k=k):
+            return x["collectives"].get(_k, {}).get("operand_bytes", 0)
+
+        def g_count(x, _k=k):
+            return x["collectives"].get(_k, {}).get("count", 0)
+
+        colls[k] = dict(count=int(round(fit(g_count))),
+                        operand_bytes=int(fit(g_bytes)))
+    out["collectives"] = colls
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             out_dir: str, with_probes: bool = True) -> dict:
+    import jax
+    from repro.configs import get_arch
+    from repro.launch.cells import (build_cell, build_probe_cell,
+                                    probe_layer_counts)
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    arch = get_arch(arch_name)
+    cell = build_cell(arch, shape_name, mesh)
+
+    rec = dict(arch=arch_name, shape=shape_name, mesh=mesh_kind,
+               mesh_shape=dict(mesh.shape), meta=cell.meta, ok=False)
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = cell.lower()
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+            ma = compiled.memory_analysis()
+            rec["memory"] = dict(
+                argument_bytes=int(ma.argument_size_in_bytes),
+                output_bytes=int(ma.output_size_in_bytes),
+                temp_bytes=int(ma.temp_size_in_bytes),
+                alias_bytes=int(ma.alias_size_in_bytes),
+                peak_bytes=int(ma.argument_size_in_bytes +
+                               ma.output_size_in_bytes +
+                               ma.temp_size_in_bytes -
+                               ma.alias_size_in_bytes),
+            )
+            raw = _measure(compiled)
+            rec["cost_raw"] = {k: raw[k] for k in
+                               ("flops", "transcendentals", "bytes_accessed")}
+            rec["collectives_raw"] = raw["collectives"]
+            rec["hlo_bytes"] = len(compiled.as_text())
+
+            # scan trip counts are opaque to cost_analysis → probe-extrapolate
+            shape_spec = arch.shapes[shape_name]
+            probes = probe_layer_counts(arch, shape_spec) \
+                if with_probes else None
+            if probes is not None:
+                l1, l2, l_full = probes
+                nc = shape_spec.sizes.get("edge_chunks", 1)
+                if arch.family == "gnn" and nc > 1:
+                    # 4-point fit over (layers, edges):
+                    # f(L,E) = a0 + a1 E + L c + L d E
+                    e_full = shape_spec.sizes["n_edges"]
+                    ep = e_full // nc
+                    m = {}
+                    for li, ei in ((l1, ep), (l2, ep), (l1, 2 * ep),
+                                   (l2, 2 * ep)):
+                        m[(li, ei)] = _measure(
+                            build_probe_cell(arch, shape_name, mesh, li,
+                                             n_edges=ei).lower().compile())
+                    est = _fit_layers_edges(m, l1, l2, ep, l_full, e_full)
+                    rec["probe"] = dict(scheme="layers_x_edges", l1=l1,
+                                        l2=l2, ep=ep, l_full=l_full,
+                                        e_full=e_full)
+                else:
+                    m1 = _measure(build_probe_cell(arch, shape_name, mesh,
+                                                   l1).lower().compile())
+                    m2 = _measure(build_probe_cell(arch, shape_name, mesh,
+                                                   l2).lower().compile())
+                    est = _extrapolate(m1, m2, l1, l2, l_full)
+                    rec["probe"] = dict(scheme="layers", l1=l1, l2=l2,
+                                        l_full=l_full, m1=m1, m2=m2)
+            else:
+                est = raw
+            rec["cost"] = {k: est[k] for k in
+                           ("flops", "transcendentals", "bytes_accessed")}
+            rec["collectives"] = est["collectives"]
+            rec["ok"] = True
+    except Exception as exc:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(exc).__name__}: {exc}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch_name}__{shape_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import ALL_ARCHS, get_arch
+
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_fail = 0
+    for mesh_kind in meshes:
+        for arch_name in archs:
+            arch = get_arch(arch_name)
+            shapes = ([args.shape] if args.shape
+                      else list(arch.runnable_shapes()))
+            for shape_name in shapes:
+                if shape_name in arch.skip_shapes:
+                    print(f"SKIP {arch_name}/{shape_name}: "
+                          f"{arch.skip_shapes[shape_name]}")
+                    continue
+                rec = run_cell(arch_name, shape_name, mesh_kind,
+                               os.path.join(args.out, mesh_kind))
+                status = "OK " if rec["ok"] else "FAIL"
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+                mem = rec.get("memory", {}).get("peak_bytes", 0) / 2 ** 30
+                fl = rec.get("cost", {}).get("flops", 0)
+                print(f"{status} [{mesh_kind}] {arch_name}/{shape_name} "
+                      f"t={rec['total_s']}s peak={mem:.2f}GiB/dev "
+                      f"flops/dev={fl:.3g}"
+                      + ("" if rec["ok"] else f" :: {rec['error']}"),
+                      flush=True)
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

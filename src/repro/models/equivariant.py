@@ -1,0 +1,314 @@
+"""Equivariant GNNs: MACE [arXiv:2206.07697] and an eSCN-style EquiformerV2
+[arXiv:2306.12059].
+
+Irrep features are laid out ``[N, (l_max+1)^2, C]`` (flat (l,m) index, C
+channels).  Real spherical harmonics up to l=6 are evaluated from cartesian
+unit vectors with the associated-Legendre recurrence (no lookup tables, pure
+jnp, grad-safe).
+
+Faithfulness notes (also in DESIGN.md §8):
+* MACE — 2-layer ACE: Bessel radial basis (8), Y_lm up to l=2, per-channel
+  density ``A_i`` via radial-weighted scatter of neighbor channels, product
+  basis to correlation order 3 built from rotation-invariant contractions
+  (B1 = scalar channel, B2_l = ||A_l||², B3_l = ||A_l||²·A_0) — a structural
+  simplification of the full Clebsch-Gordan symmetric contraction that keeps
+  the compute regime (gather → per-edge tensor ops → scatter → per-node
+  contraction) and correlation-order scaling.
+* EquiformerV2 — the eSCN insight is implemented structurally: messages mix
+  across l *within each m block*, restricted to |m| <= m_max (2), with
+  radial modulation; attention weights come from the invariant (l=0)
+  channels via a per-head MLP + segment softmax.  The Wigner-D rotation into
+  the edge frame is replaced by operating directly in the global frame
+  (same block-sparse compute pattern; the rotation is a per-edge unitary
+  that does not change FLOP structure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .gnn import (_mlp_shapes, chunk_edges, constrain0, cosine_cutoff,
+                  edge_geometry_chunk, edge_scan, mlp, segment_sum,
+                  sum_edge_scan)
+from .layers import mm
+
+
+# ---------------------------------------------------- real spherical harmonics
+def real_sph_harm(l_max: int, vec: jnp.ndarray) -> jnp.ndarray:
+    """Real spherical harmonics Y_lm for unit vectors ``vec [E, 3]``.
+
+    Returns [E, (l_max+1)^2] ordered (l, m) with m = -l..l.
+    Uses P̃_l^m(z) = P_l^m / sin^m θ (polynomials in z) and
+    c_m = Re[(x+iy)^m], s_m = Im[(x+iy)^m], so no trig of angles is needed.
+    """
+    x, y, z = vec[..., 0], vec[..., 1], vec[..., 2]
+    # c_m, s_m recurrences
+    c = [jnp.ones_like(x)]
+    s = [jnp.zeros_like(x)]
+    for m in range(1, l_max + 1):
+        cm = c[-1] * x - s[-1] * y
+        sm = s[-1] * x + c[-1] * y
+        c.append(cm)
+        s.append(sm)
+    # P̃_l^m recurrences
+    ptilde: Dict[tuple, jnp.ndarray] = {(0, 0): jnp.ones_like(z)}
+    for m in range(1, l_max + 1):
+        ptilde[(m, m)] = ptilde[(m - 1, m - 1)] * (2 * m - 1)
+    for m in range(0, l_max):
+        ptilde[(m + 1, m)] = z * (2 * m + 1) * ptilde[(m, m)]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            ptilde[(l, m)] = ((2 * l - 1) * z * ptilde[(l - 1, m)] -
+                              (l - 1 + m) * ptilde[(l - 2, m)]) / (l - m)
+    out = []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            am = abs(m)
+            norm = math.sqrt((2 * l + 1) / (4 * math.pi) *
+                             math.factorial(l - am) / math.factorial(l + am))
+            if m != 0:
+                norm *= math.sqrt(2.0)
+            base = norm * ptilde[(l, am)]
+            out.append(base * (c[am] if m >= 0 else s[am]))
+    return jnp.stack(out, axis=-1)
+
+
+def lm_tables(l_max: int):
+    ls, ms = [], []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            ls.append(l)
+            ms.append(m)
+    return np.asarray(ls), np.asarray(ms)
+
+
+def bessel_rbf(dist, n_rbf: int, cutoff: float):
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    d = jnp.maximum(dist[:, None], 1e-6)
+    return jnp.sqrt(2.0 / cutoff) * jnp.sin(n * math.pi * d / cutoff) / d
+
+
+# ======================================================================
+# MACE
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_in: int = 16
+    d_out: int = 1
+    edge_chunks: int = 1
+    node_shard: tuple = None
+    edge_shard: tuple = None
+    feat_shard: tuple = None
+
+    @property
+    def n_lm(self) -> int:
+        return (self.l_max + 1) ** 2
+
+
+def mace_param_shapes(cfg: MACEConfig):
+    sd = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    c, nl = cfg.d_hidden, cfg.l_max + 1
+    n_inv = 1 + nl * (cfg.correlation - 1)     # B1 + B2_l + B3_l blocks
+    out = {"embed_w": sd(cfg.d_in, c), "embed_b": sd(c)}
+    for i in range(cfg.n_layers):
+        out.update(_mlp_shapes(f"radial{i}", (cfg.n_rbf, c, c * nl), sd))
+        out[f"mix{i}_w"] = sd(n_inv * c, c)
+        out[f"mix{i}_b"] = sd(c)
+    out.update(_mlp_shapes("readout", (c, c, cfg.d_out), sd))
+    return out
+
+
+def mace_forward(cfg: MACEConfig, params, batch):
+    n = batch["features"].shape[0]
+    pos = batch["positions"]
+    edges = chunk_edges((batch["edge_src"], batch["edge_dst"]),
+                        cfg.edge_chunks)
+    ls, _ = lm_tables(cfg.l_max)
+    l_of = jnp.asarray(ls)
+    c, nl = cfg.d_hidden, cfg.l_max + 1
+
+    h = constrain0(mm(batch["features"], params["embed_w"]) +
+                   params["embed_b"], cfg.node_shard, cfg.feat_shard)
+    for i in range(cfg.n_layers):
+        def chunk(ec, _i=i):
+            src_c, dst_c = ec
+            vec, dist = edge_geometry_chunk(pos, src_c, dst_c)
+            rhat = vec / jnp.maximum(dist[:, None], 1e-6)
+            sh = real_sph_harm(cfg.l_max, rhat)              # [e, n_lm]
+            rbf = bessel_rbf(dist, cfg.n_rbf, cfg.cutoff) * \
+                cosine_cutoff(dist, cfg.cutoff)[:, None]
+            rad = mlp(f"radial{_i}", params, rbf, 2).reshape(-1, c, nl)
+            rad_lm = rad[:, :, l_of]                          # [e,C,n_lm]
+            # density A_i[c, lm] = Σ_j rad[e,c,lm] · Y[e,lm] · h_j[c]
+            edge_val = rad_lm * sh[:, None, :] * h[src_c][:, :, None]
+            return segment_sum(edge_val, dst_c, n)
+
+        A = constrain0(sum_edge_scan(chunk, edges, cfg.edge_chunks, n,
+                                     cfg.node_shard),
+                       cfg.node_shard)   # [N,C,n_lm]: lm last → no feat axes
+        # invariant product basis (correlation 1..3)
+        b1 = A[:, :, 0]                                              # ν=1
+        b2 = segment_sum(jnp.square(A).transpose(2, 0, 1), l_of, nl) \
+            .transpose(1, 2, 0)                                      # [N,C,L+1]
+        b3 = b2 * A[:, :, 0:1]                                       # ν=3
+        inv = jnp.concatenate(
+            [b1[:, :, None], b2, b3], axis=-1).reshape(n, -1)
+        msg = mm(inv, params[f"mix{i}_w"]) + params[f"mix{i}_b"]
+        h = h + jax.nn.silu(msg)
+    return mlp("readout", params, h, 2)
+
+
+# ======================================================================
+# EquiformerV2 (eSCN-style)
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class EquiformerV2Config:
+    name: str
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 16
+    cutoff: float = 8.0
+    d_in: int = 16
+    d_out: int = 1
+    edge_chunks: int = 1
+    node_shard: tuple = None
+    edge_shard: tuple = None
+    feat_shard: tuple = None
+
+    @property
+    def n_lm(self) -> int:
+        return (self.l_max + 1) ** 2
+
+
+def _m_blocks(l_max: int, m_max: int):
+    """For each m in [-m_max, m_max]: flat (l,m) indices with l >= |m|."""
+    ls, ms = lm_tables(l_max)
+    blocks = []
+    for m in range(-m_max, m_max + 1):
+        idx = np.nonzero(ms == m)[0]
+        blocks.append((m, idx))
+    return blocks
+
+
+def equiformer_param_shapes(cfg: EquiformerV2Config):
+    sd = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    c = cfg.d_hidden
+    out = {"embed_w": sd(cfg.d_in, c), "embed_b": sd(c)}
+    blocks = _m_blocks(cfg.l_max, cfg.m_max)
+    for i in range(cfg.n_layers):
+        for m, idx in blocks:
+            out[f"so2_{i}_m{m}"] = sd(len(idx), c, c)       # l-mix per m block
+        out.update(_mlp_shapes(f"alpha{i}", (2 * c + cfg.n_rbf, c,
+                                             cfg.n_heads), sd))
+        out.update(_mlp_shapes(f"rad{i}", (cfg.n_rbf, c, c), sd))
+        out[f"gate{i}_w"] = sd(c, c * (cfg.l_max + 1))
+        out.update(_mlp_shapes(f"ffn{i}", (c, 2 * c, c), sd))
+    out.update(_mlp_shapes("readout", (c, c, cfg.d_out), sd))
+    return out
+
+
+def equiformer_forward(cfg: EquiformerV2Config, params, batch):
+    n = batch["features"].shape[0]
+    pos = batch["positions"]
+    edges = chunk_edges((batch["edge_src"], batch["edge_dst"]),
+                        cfg.edge_chunks)
+    ls, _ = lm_tables(cfg.l_max)
+    l_of = jnp.asarray(ls)
+    c, h_heads = cfg.d_hidden, cfg.n_heads
+    blocks = _m_blocks(cfg.l_max, cfg.m_max)
+    nc = cfg.edge_chunks
+
+    def geom(src_c, dst_c):
+        vec, dist = edge_geometry_chunk(pos, src_c, dst_c)
+        rhat = vec / jnp.maximum(dist[:, None], 1e-6)
+        sh = real_sph_harm(cfg.l_max, rhat)
+        rbf = bessel_rbf(dist, cfg.n_rbf, cfg.cutoff) * \
+            cosine_cutoff(dist, cfg.cutoff)[:, None]
+        return sh, rbf
+
+    # init irrep features: scalar channel from inputs
+    h0 = mm(batch["features"], params["embed_w"]) + params["embed_b"]
+    feats = constrain0(
+        jnp.zeros((n, cfg.n_lm, c), jnp.float32).at[:, 0, :].set(h0),
+        cfg.node_shard, cfg.feat_shard)
+
+    for i in range(cfg.n_layers):
+        # ---- pass 1 (cheap, invariant channels only): segment max + denom
+        def alpha_logits(src_c, dst_c, rbf, _i=i):
+            a_in = jnp.concatenate(
+                [feats[src_c][:, 0], feats[dst_c][:, 0], rbf], -1)
+            return mlp(f"alpha{_i}", params, a_in, 2)       # [e, H]
+
+        def pass1(acc, ec, _i=i):
+            src_c, dst_c = ec
+            _, rbf = geom(src_c, dst_c)
+            lg = alpha_logits(src_c, dst_c, rbf, _i)
+            return jnp.maximum(
+                acc, jax.ops.segment_max(lg, dst_c, num_segments=n))
+
+        seg_max = edge_scan(pass1, jnp.full((n, h_heads), -1e30), edges, nc)
+        seg_max = jnp.maximum(seg_max, -1e29)               # isolated nodes
+
+        # ---- pass 2: eSCN messages weighted by unnormalized attention.
+        # Messages live entirely in the |m| <= m_max subspace (29 of 49
+        # components at L=6): gather/compute/scatter only that slice, in
+        # bf16 — ~3.3x less all-gather volume at ogb scale, identical math
+        # (components outside the slice were zero by construction).
+        sel_sorted = np.unique(np.concatenate([idx for _, idx in blocks]))
+        pos_of = {int(v): int(p) for p, v in enumerate(sel_sorted)}
+        n_sel = len(sel_sorted)
+        sel_d = jnp.asarray(sel_sorted)
+        feats_msg = constrain0(
+            feats[:, sel_d, :].astype(jnp.bfloat16),
+            cfg.node_shard, cfg.feat_shard)
+
+        def pass2(ec, _i=i):
+            src_c, dst_c = ec
+            sh, rbf = geom(src_c, dst_c)
+            lg = alpha_logits(src_c, dst_c, rbf, _i)
+            expl = jnp.exp(lg - seg_max[dst_c])             # [e, H]
+            hs = feats_msg[src_c].astype(jnp.float32)       # [e, n_sel, C]
+            msg = jnp.zeros((src_c.shape[0], n_sel, c), jnp.float32)
+            for m, idx in blocks:
+                w = params[f"so2_{_i}_m{m}"]                # [nl, C, C]
+                rows = jnp.asarray([pos_of[int(v)] for v in idx])
+                mixed = jnp.einsum("enc,ncd->end", hs[:, rows, :], w)
+                msg = msg.at[:, rows, :].set(mixed)
+            rad = mlp(f"rad{_i}", params, rbf, 2)           # [e, C]
+            msg = msg * rad[:, None, :] * sh[:, sel_d, None]
+            msg = msg.reshape(src_c.shape[0], n_sel, h_heads,
+                              c // h_heads)
+            msg = (msg * expl[:, None, :, None]).reshape(
+                src_c.shape[0], n_sel, c)
+            return (segment_sum(msg, dst_c, n),
+                    segment_sum(expl, dst_c, n))
+
+        num, den = sum_edge_scan(pass2, edges, nc, n,
+                                 cfg.node_shard)            # [N, n_sel, C]
+        den = jnp.repeat(den + 1e-9, c // h_heads, axis=-1)  # [N, C]
+        feats = feats.at[:, sel_d, :].add(num / den[:, None, :])
+        feats = constrain0(feats, cfg.node_shard, cfg.feat_shard)
+        # ---- gated nonlinearity: scalars gate each l's components
+        gate = jax.nn.sigmoid(
+            mm(feats[:, 0], params[f"gate{i}_w"])).reshape(
+                n, cfg.l_max + 1, c)
+        feats = feats * gate[:, l_of, :]
+        # ---- FFN on the invariant channel
+        feats = feats.at[:, 0, :].add(mlp(f"ffn{i}", params, feats[:, 0], 2))
+
+    return mlp("readout", params, feats[:, 0], 2)

@@ -1,0 +1,105 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (training/prefill
+via memory-bounded chunked online-softmax, decode via KV cache with optional
+sliding window), logit soft-capping.
+
+Precision policy (MaxText-style): parameters live in fp32; matmul inputs are
+cast to bf16 with fp32 accumulation (``preferred_element_type``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+BF16 = jnp.bfloat16
+
+
+def mm(x, w):
+    """bf16 matmul with fp32 accumulation."""
+    return jax.lax.dot_general(
+        x.astype(BF16), w.astype(BF16),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None or cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ------------------------------------------------------------------- rotary
+def rope_frequencies(d_head: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., T, H, D]; positions: broadcastable to [..., T]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # [D/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)              # [..., T, 1, D/2]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# -------------------------------------------------- chunked (flash) attention
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window=None,
+                      logit_cap=None,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      q_offset: int = 0):
+    """Online-softmax attention, flash-style custom VJP (see models/flash.py:
+    forward saves only (out, logsumexp); backward recomputes scores per
+    tile).  q: [B, Tq, Hq, D]; k, v: [B, Tk, Hkv, D]; GQA via Hq % Hkv == 0;
+    ``window`` may be a traced scalar."""
+    from .flash import flash_attention
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           logit_cap=logit_cap, q_chunk=q_chunk,
+                           kv_chunk=kv_chunk, q_offset=q_offset)
+
+
+# -------------------------------------------------------------------- decode
+def decode_attention(q, k_cache, v_cache, position, *,
+                     window: Optional[int] = None,
+                     logit_cap: Optional[float] = None):
+    """Single-token attention against a KV cache.
+
+    q: [B, Hq, D]; k_cache, v_cache: [B, S, Hkv, D]; position: scalar int
+    (index of the new token; cache entries >= position are invalid).
+    With ``window``, only the last ``window`` cache slots are read
+    (static-size dynamic slice — sub-quadratic local layers).
+    """
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    if window is not None and window < s:
+        start = jnp.clip(position - (window - 1), 0, s - window)
+        k_cache = jax.lax.dynamic_slice_in_dim(k_cache, start, window, 1)
+        v_cache = jax.lax.dynamic_slice_in_dim(v_cache, start, window, 1)
+        k_pos = start + jnp.arange(window)
+    else:
+        k_pos = jnp.arange(s)
+
+    qh = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qh.astype(BF16),
+                        k_cache.astype(BF16),
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, logit_cap)
+    valid = k_pos <= position
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(BF16),
+                     v_cache.astype(BF16),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, d)

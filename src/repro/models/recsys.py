@@ -1,0 +1,166 @@
+"""Wide & Deep recsys [arXiv:1606.07792].
+
+The hot path is the sparse embedding lookup over large tables.  JAX has no
+native EmbeddingBag — lookups are expressed as gathers over a stacked
+per-field table ``[F, V, D]`` (vocab-sharded over the ``model`` axis; GSPMD
+turns the gather into local-gather + mask + all-reduce, which *is* the
+one-hot-matmul trick semantically).  The Pallas VMEM-tiled variant lives in
+:mod:`repro.kernels.embedding_bag`, with multi-hot bags reduced via
+``segment_sum``.
+
+``retrieval_cand`` (score one query against 10^6 candidates) broadcasts the
+user context and sweeps the item field — a batched-matmul scoring pass plus
+a global top-k, reusing the paper's top-k result-set semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import BF16, mm
+
+
+@dataclasses.dataclass(frozen=True)
+class WideDeepConfig:
+    name: str
+    n_sparse: int = 40
+    n_dense: int = 13
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 32
+    mlp_dims: tuple = (1024, 512, 256)
+    item_field: int = 0           # field swept during retrieval scoring
+
+
+def widedeep_param_shapes(cfg: WideDeepConfig):
+    sd = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    f, v, d = cfg.n_sparse, cfg.vocab_per_field, cfg.embed_dim
+    out = {
+        "tables": sd(f, v, d),          # deep embeddings
+        "wide": sd(f, v),               # wide (dim-1) embeddings
+        "wide_dense_w": sd(cfg.n_dense, 1),
+        "bias": sd(1),
+    }
+    dims = (f * d + cfg.n_dense,) + tuple(cfg.mlp_dims) + (1,)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        out[f"mlp_w{i}"] = sd(a, b)
+        out[f"mlp_b{i}"] = sd(b)
+    return out
+
+
+def widedeep_param_specs(cfg: WideDeepConfig, mesh, rules=None):
+    from .sharding import LM_RULES, resolve
+    rules = rules or LM_RULES
+    shapes = widedeep_param_shapes(cfg)
+    logical = {
+        "tables": (None, "table_vocab", None),
+        "wide": (None, "table_vocab"),
+        "wide_dense_w": (None, None),
+        "bias": (None,),
+    }
+    out = {}
+    for k, sds in shapes.items():
+        if k.startswith("mlp_w"):
+            lg = (None, "ff") if int(k[-1]) < len(cfg.mlp_dims) else (None, None)
+        elif k.startswith("mlp_b"):
+            lg = ("ff",) if int(k[-1]) < len(cfg.mlp_dims) else (None,)
+        else:
+            lg = logical[k]
+        out[k] = resolve(mesh, rules, lg, sds.shape)
+    return out
+
+
+def _embed_lookup(params, sparse_ids):
+    """sparse_ids [B, F] -> deep [B, F*D], wide_logit [B]."""
+    f = sparse_ids.shape[1]
+    fields = jnp.arange(f)[None, :]
+    emb = params["tables"][fields, sparse_ids]           # [B, F, D]
+    wide = params["wide"][fields, sparse_ids]            # [B, F]
+    return emb.reshape(sparse_ids.shape[0], -1), jnp.sum(wide, axis=1)
+
+
+def _deep_mlp(cfg, params, x):
+    n_mlp = len(cfg.mlp_dims) + 1
+    for i in range(n_mlp):
+        x = mm(x, params[f"mlp_w{i}"]) + params[f"mlp_b{i}"]
+        if i < n_mlp - 1:
+            x = jax.nn.relu(x)
+    return x[:, 0]
+
+
+def widedeep_logits(cfg: WideDeepConfig, params, batch):
+    deep_in, wide_logit = _embed_lookup(params, batch["sparse_ids"])
+    deep_in = jnp.concatenate([deep_in, batch["dense"]], axis=-1)
+    deep_logit = _deep_mlp(cfg, params, deep_in)
+    wide_logit = wide_logit + \
+        mm(batch["dense"], params["wide_dense_w"])[:, 0]
+    return deep_logit + wide_logit + params["bias"][0]
+
+
+def widedeep_loss(cfg: WideDeepConfig, params, batch):
+    logits = widedeep_logits(cfg, params, batch)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def widedeep_serve(cfg: WideDeepConfig, params, batch):
+    return jax.nn.sigmoid(widedeep_logits(cfg, params, batch))
+
+
+def widedeep_retrieval(cfg: WideDeepConfig, params, dense, base_ids,
+                       cand_ids, top_k: int = 128):
+    """Score one user context against ``cand_ids`` item candidates.
+
+    dense [1, n_dense]; base_ids [1, F]; cand_ids [C] → (scores, ids) top-k.
+    Reference (paper-faithful top-k semantics): broadcast the context into a
+    [C, F] batch and run the full model.  Kept as the baseline the optimized
+    path is verified against (tests/test_models_smoke.py).
+    """
+    c = cand_ids.shape[0]
+    ids = jnp.broadcast_to(base_ids, (c, cfg.n_sparse))
+    ids = ids.at[:, cfg.item_field].set(cand_ids)
+    batch = {"sparse_ids": ids,
+             "dense": jnp.broadcast_to(dense, (c, cfg.n_dense))}
+    scores = widedeep_logits(cfg, params, batch)
+    return jax.lax.top_k(scores, top_k)
+
+
+def widedeep_retrieval_fast(cfg: WideDeepConfig, params, dense, base_ids,
+                            cand_ids, top_k: int = 128):
+    """Factorized retrieval scoring: only ``item_field`` varies across the
+    candidates, so the 39 constant fields' embeddings AND their contribution
+    to the first MLP layer are computed ONCE and broadcast — per-candidate
+    work shrinks to one embedding row + a [D_emb → mlp0] matmul slice
+    (40x fewer lookups, ~25x fewer first-layer FLOPs).  Exactly equal to
+    :func:`widedeep_retrieval` (tested)."""
+    c = cand_ids.shape[0]
+    f, d = cfg.n_sparse, cfg.embed_dim
+    it = cfg.item_field
+
+    # constant part: one row through embeddings + first-layer matmul
+    deep_in_const, wide_const = _embed_lookup(params, base_ids)   # [1, F*D]
+    wide_const = wide_const + mm(dense, params["wide_dense_w"])[:, 0]
+    w0 = params["mlp_w0"]                       # [F*D + n_dense, mlp0]
+    full_in = jnp.concatenate([deep_in_const, dense], axis=-1)
+    h0_const = mm(full_in, w0) + params["mlp_b0"]                 # [1, mlp0]
+    # subtract the base item field's contribution (it varies per candidate)
+    w0_item = jax.lax.dynamic_slice_in_dim(w0, it * d, d, 0)      # [D, mlp0]
+    item_base = deep_in_const[:, it * d:(it + 1) * d]
+    h0_const = h0_const - mm(item_base, w0_item)
+    wide_const = wide_const - params["wide"][it, base_ids[0, it]]
+
+    # per-candidate part
+    cand_emb = params["tables"][it, cand_ids]                     # [C, D]
+    h0 = h0_const + mm(cand_emb, w0_item)                         # [C, mlp0]
+    wide = wide_const + params["wide"][it, cand_ids]              # [C]
+    x = jax.nn.relu(h0)
+    n_mlp = len(cfg.mlp_dims) + 1
+    for i in range(1, n_mlp):
+        x = mm(x, params[f"mlp_w{i}"]) + params[f"mlp_b{i}"]
+        if i < n_mlp - 1:
+            x = jax.nn.relu(x)
+    scores = x[:, 0] + wide + params["bias"][0]
+    return jax.lax.top_k(scores, top_k)

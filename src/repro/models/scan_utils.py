@@ -1,0 +1,89 @@
+"""Memory-bounded accumulation scans.
+
+``lax.scan``'s reverse-mode saves the carry at *every* step — for a pure
+accumulation (``acc += f(chunk)``) that stores n_chunks copies of the
+accumulator (measured: 15 GiB/device for EquiformerV2 on ogb_products).
+:func:`sum_scan` exploits linearity: d(acc) passes through every chunk
+unchanged, so the backward is a second scan that replays each chunk's VJP
+against the SAME cotangent — zero carry residuals.
+
+``fn`` may close over parameters/activations; ``jax.closure_convert``
+exposes them so their cotangents accumulate correctly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _float0_like(x):
+    if jnp.issubdtype(x.dtype, jnp.floating) or \
+            jnp.issubdtype(x.dtype, jnp.complexfloating):
+        return jnp.zeros_like(x)
+    return np.zeros(x.shape, jax.dtypes.float0)
+
+
+def sum_scan(fn, xs, dc_fix=None):
+    """Return ``Σ_i fn(xs[i])`` where ``xs`` is a pytree of ``[n, ...]``
+    arrays (chunk-major).  Output may be any pytree of float arrays.
+
+    Backward memory: one cotangent + one chunk VJP at a time (vs. scan's
+    n_chunks saved carries).  ``dc_fix(primal_const, cotangent)`` lets the
+    caller pin shardings on the backward accumulators (GSPMD otherwise
+    replicates the zero-initialized carry through the while loop).
+    """
+    x0 = jax.tree.map(lambda a: a[0], xs)
+    conv, consts = jax.closure_convert(fn, x0)
+    return _sum_scan_inner(conv, dc_fix, xs, list(consts))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _sum_scan_inner(conv, dc_fix, xs, consts):
+    def body(acc, xc):
+        delta = conv(xc, *consts)
+        return jax.tree.map(jnp.add, acc, delta), None
+
+    x0 = jax.tree.map(lambda a: a[0], xs)
+    init = jax.tree.map(jnp.zeros_like,
+                        jax.eval_shape(lambda c: conv(c, *consts), x0))
+    acc, _ = jax.lax.scan(body, init, xs)
+    return acc
+
+
+def _fwd(conv, dc_fix, xs, consts):
+    return _sum_scan_inner(conv, dc_fix, xs, consts), (xs, consts)
+
+
+def _bwd(conv, dc_fix, res, g):
+    xs, consts = res
+
+    def body(dc_acc, xc):
+        _, pullback = jax.vjp(lambda xc_, cs: conv(xc_, *cs), xc,
+                              list(consts))
+        dxc, dcs = pullback(g)
+        dc_acc = jax.tree.map(
+            lambda a, b: a if b is None else a + b, dc_acc, dcs)
+        if dc_fix is not None:
+            dc_acc = [dc_fix(c, d) for c, d in zip(consts, dc_acc)]
+        return dc_acc, dxc
+
+    dc0 = [jnp.zeros(c.shape, c.dtype) if jnp.issubdtype(
+        c.dtype, jnp.floating) else jnp.zeros(c.shape, jnp.float32)
+        for c in consts]
+    if dc_fix is not None:
+        dc0 = [dc_fix(c, d) for c, d in zip(consts, dc0)]
+    dconsts, dxs = jax.lax.scan(body, dc0, xs)
+    # integer leaves (edge indices) carry float0 cotangents
+    dxs = jax.tree.map(
+        lambda x, dx: dx if jnp.issubdtype(x.dtype, jnp.floating)
+        else np.zeros(x.shape, jax.dtypes.float0), xs, dxs)
+    dconsts = [np.zeros(c.shape, jax.dtypes.float0)
+               if not jnp.issubdtype(c.dtype, jnp.floating) else d
+               for c, d in zip(consts, dconsts)]
+    return dxs, list(dconsts)
+
+
+_sum_scan_inner.defvjp(_fwd, _bwd)

@@ -1,0 +1,82 @@
+"""Logical-axis sharding rules.
+
+Parameters and activations are annotated with *logical* axis names; a rule
+set maps them to mesh axes.  :func:`resolve` drops a mapping when the
+dimension size is not divisible by the mesh-axis extent (e.g. glm4's 2 KV
+heads cannot shard over a 16-way model axis → replicated), so every
+(arch × mesh) cell resolves to a valid PartitionSpec automatically.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+# default logical→mesh rules for LM training (Megatron-style TP + DP batch)
+LM_RULES: Dict[str, Axes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,          # d_model replicated
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "layers": None,
+    "kv_seq": "model",      # decode KV cache sequence axis
+    "cand": ("data", "model"),
+    "nodes": ("pod", "data"),
+    "edges": ("pod", "data"),
+    "feat": "model",
+    "table_vocab": "model",
+}
+
+
+def _mesh_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def resolve(mesh: Mesh, rules: Dict[str, Axes], logical: Sequence[Optional[str]],
+            shape: Sequence[int]) -> P:
+    """Build a PartitionSpec for ``shape`` from logical axis names.
+
+    Mesh axes not present in the mesh (e.g. ``pod`` on the single-pod mesh)
+    are silently dropped; non-divisible mappings fall back to replication.
+    """
+    assert len(logical) == len(shape), (logical, shape)
+    spec = []
+    for name, dim in zip(logical, shape):
+        axes = rules.get(name) if name else None
+        if axes is None:
+            spec.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes:
+            spec.append(None)
+            continue
+        if dim % _mesh_size(mesh, axes) != 0:
+            # try prefixes before giving up (e.g. ('data','model') -> ('data',))
+            while axes and dim % _mesh_size(mesh, axes) != 0:
+                axes = axes[:-1]
+            spec.append(tuple(axes) if len(axes) > 1 else
+                        (axes[0] if axes else None))
+            continue
+        spec.append(tuple(axes) if len(axes) > 1 else axes[0])
+    return P(*spec)
+
+
+def named(mesh: Mesh, rules: Dict[str, Axes], logical, shape) -> NamedSharding:
+    return NamedSharding(mesh, resolve(mesh, rules, logical, shape))

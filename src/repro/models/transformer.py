@@ -1,0 +1,363 @@
+"""Decoder-only LM family covering the five assigned architectures:
+
+* glm4-9b     — dense, RoPE, GQA (2 KV heads)
+* gemma2-9b   — dense, alternating local(4096)/global attention, logit
+                soft-capping (attn 50, final 30), post-norms
+* phi3-mini   — dense, RoPE, SwiGLU (kv == q heads)
+* granite-moe — MoE 32e top-8
+* arctic-480b — MoE 128e top-2 with a parallel dense-FFN residual branch
+
+One config dataclass selects everything; the forward pass is a single
+``lax.scan`` over stacked layer parameters (remat'd), attention is the
+chunked online-softmax from :mod:`repro.models.layers`, the LM loss streams
+over sequence chunks so full-vocab logits are never materialized.
+Decode (serve) is an unrolled per-layer loop so local layers get *static*
+sliding-window cache reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .layers import (BF16, apply_rope, chunked_attention, decode_attention,
+                     mm, rms_norm, softcap)
+from .moe import MoEConfig, moe_ffn
+from .sharding import LM_RULES, resolve
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    rope_theta: float = 10000.0
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    window: Optional[int] = None      # sliding-window size for local layers
+    local_global: bool = False        # alternate local/global (gemma2)
+    use_post_norms: bool = False      # gemma2 post-attention/post-ffn norms
+    moe: Optional[MoEConfig] = None
+    dense_residual: bool = False      # arctic: dense FFN parallel to MoE
+    norm_eps: float = 1e-6
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    loss_chunk: int = 512
+    remat: bool = True
+    # activation sharding (sequence parallelism): residual stream constrained
+    # to P(batch_shard, seq_shard, None) between layers when set
+    batch_shard: tuple = None
+    seq_shard: tuple = None
+    # probe mode: python-unrolled layer loop (XLA cost_analysis counts scan
+    # bodies once; unrolled HLO measures true per-layer cost)
+    unroll_layers: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // 256) * 256
+
+    def is_local(self, layer: int) -> bool:
+        return self.local_global and layer % 2 == 0
+
+    @property
+    def local_flags(self) -> np.ndarray:
+        return np.array([self.is_local(i) for i in range(self.n_layers)],
+                        np.bool_)
+
+    def param_count(self) -> int:
+        shapes = jax.tree.leaves(param_shapes(self))
+        return sum(int(np.prod(s.shape)) for s in shapes)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k experts only)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        e, k = self.moe.num_experts, self.moe.top_k
+        expert = 3 * self.d_model * self.moe.d_ff_expert
+        return total - self.n_layers * (e - k) * expert
+
+
+# ------------------------------------------------------------------- params
+def _layer_shapes(cfg: TransformerConfig) -> Dict[str, Any]:
+    l, d = cfg.n_layers, cfg.d_model
+    hq = cfg.n_heads * cfg.head_dim
+    hkv = cfg.n_kv_heads * cfg.head_dim
+    sd = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    out = {
+        "attn_norm": sd(l, d),
+        "wq": sd(l, d, hq), "wk": sd(l, d, hkv), "wv": sd(l, d, hkv),
+        "wo": sd(l, hq, d),
+        "ffn_norm": sd(l, d),
+    }
+    if cfg.use_post_norms:
+        out["post_attn_norm"] = sd(l, d)
+        out["post_ffn_norm"] = sd(l, d)
+    if cfg.moe is not None:
+        e, fe = cfg.moe.num_experts, cfg.moe.d_ff_expert
+        out.update(router=sd(l, d, e), we1=sd(l, e, d, fe),
+                   we3=sd(l, e, d, fe), we2=sd(l, e, fe, d))
+    if cfg.moe is None or cfg.dense_residual:
+        f = cfg.d_ff
+        out.update(w1=sd(l, d, f), w3=sd(l, d, f), w2=sd(l, f, d))
+    return out
+
+
+def param_shapes(cfg: TransformerConfig) -> Dict[str, Any]:
+    d, vp = cfg.d_model, cfg.vocab_padded
+    sd = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    return {
+        "embed": sd(vp, d),
+        "layers": _layer_shapes(cfg),
+        "final_norm": sd(d),
+        "unembed": sd(d, vp),
+    }
+
+
+_LOGICAL = {
+    "embed": ("vocab", "embed"),
+    "unembed": ("embed", "vocab"),
+    "final_norm": ("embed",),
+    "attn_norm": ("layers", "embed"),
+    "ffn_norm": ("layers", "embed"),
+    "post_attn_norm": ("layers", "embed"),
+    "post_ffn_norm": ("layers", "embed"),
+    "wq": ("layers", "embed", "heads"),
+    "wk": ("layers", "embed", "kv_heads"),
+    "wv": ("layers", "embed", "kv_heads"),
+    "wo": ("layers", "heads", "embed"),
+    "w1": ("layers", "embed", "ff"),
+    "w3": ("layers", "embed", "ff"),
+    "w2": ("layers", "ff", "embed"),
+    "router": ("layers", "embed", "experts"),
+    "we1": ("layers", "experts", "embed", "expert_ff"),
+    "we3": ("layers", "experts", "embed", "expert_ff"),
+    "we2": ("layers", "experts", "expert_ff", "embed"),
+}
+
+
+def param_specs(cfg: TransformerConfig, mesh: Mesh,
+                rules=None) -> Dict[str, Any]:
+    rules = rules or LM_RULES
+    shapes = param_shapes(cfg)
+
+    def one(path, sds):
+        name = path[-1]
+        return resolve(mesh, rules, _LOGICAL[name], sds.shape)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s: one(tuple(k.key for k in p), s), shapes)
+
+
+def init_params(cfg: TransformerConfig, rng) -> Dict[str, Any]:
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes)
+    keys = jax.random.split(rng, len(leaves))
+
+    def one(key, sds):
+        if sds.shape[-1:] and len(sds.shape) >= 2:
+            scale = 1.0 / math.sqrt(sds.shape[-2])
+        else:
+            scale = 0.0   # norm scales start at 0 (rms_norm uses 1 + scale)
+        if scale == 0.0:
+            return jnp.zeros(sds.shape, sds.dtype)
+        return jax.random.normal(key, sds.shape, sds.dtype) * scale
+
+    return jax.tree.unflatten(treedef, [one(k, s)
+                                        for k, s in zip(keys, leaves)])
+
+
+# ------------------------------------------------------------------ forward
+def _attention_block(cfg: TransformerConfig, p, x, positions, window_val):
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["attn_norm"])
+    q = mm(h, p["wq"]).reshape(b, s, hq, dh)
+    k = mm(h, p["wk"]).reshape(b, s, hkv, dh)
+    v = mm(h, p["wv"]).reshape(b, s, hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    attn = chunked_attention(
+        q, k, v, causal=True, window=window_val,
+        logit_cap=cfg.attn_softcap,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    out = mm(attn.reshape(b, s, hq * dh).astype(BF16), p["wo"])
+    if cfg.use_post_norms:
+        out = rms_norm(out, p["post_attn_norm"])
+    return out.astype(x.dtype), (k, v)
+
+
+def _dense_ffn(p, h):
+    g = jax.nn.silu(mm(h, p["w1"]))
+    u = mm(h, p["w3"])
+    return mm((g * u).astype(BF16), p["w2"])
+
+
+def _ffn_block(cfg: TransformerConfig, p, x):
+    b, s, d = x.shape
+    h = rms_norm(x, p["ffn_norm"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        flat = h.reshape(b * s, d)
+        out, aux = moe_ffn(flat, p["router"], p["we1"], p["we3"], p["we2"],
+                           cfg.moe)
+        out = out.reshape(b, s, d)
+        if cfg.dense_residual:
+            out = out + _dense_ffn(p, h)
+    else:
+        out = _dense_ffn(p, h)
+    if cfg.use_post_norms:
+        out = rms_norm(out, p["post_ffn_norm"])
+    return out.astype(x.dtype), aux
+
+
+def _constrain_act(cfg: TransformerConfig, x):
+    if cfg.batch_shard is None and cfg.seq_shard is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(cfg.batch_shard, cfg.seq_shard, None))
+
+
+def forward_trunk(cfg: TransformerConfig, params, tokens,
+                  return_kv: bool = False):
+    """Embed + all layers + final norm.  Returns (x [B,S,D] bf16, aux, kv)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(BF16)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), BF16)
+    x = _constrain_act(cfg, x)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    local_flags = jnp.asarray(cfg.local_flags)
+    big = jnp.int32(2 * s)
+    win = jnp.int32(cfg.window or 0)
+
+    def body(x, scanned):
+        p, is_local = scanned
+        window_val = jnp.where(is_local, win, big) if cfg.local_global \
+            else (cfg.window if cfg.window else None)
+        attn_out, kv = _attention_block(cfg, p, x, positions, window_val)
+        x = _constrain_act(cfg, x + attn_out)
+        ffn_out, aux = _ffn_block(cfg, p, x)
+        x = _constrain_act(cfg, x + ffn_out)
+        return x, (aux, kv if return_kv else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.unroll_layers:
+        auxs, kvs_list = [], []
+        for i in range(cfg.n_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (aux, kv) = body(x, (p_i, local_flags[i]))
+            auxs.append(aux)
+            kvs_list.append(kv)
+        auxs = jnp.stack(auxs)
+        kvs = (jax.tree.map(lambda *xs: jnp.stack(xs), *kvs_list)
+               if return_kv else None)
+    else:
+        x, (auxs, kvs) = jax.lax.scan(body, x,
+                                      (params["layers"], local_flags))
+    x = rms_norm(x, params["final_norm"])
+    return x, jnp.sum(auxs), kvs
+
+
+def lm_loss(cfg: TransformerConfig, params, tokens, targets):
+    """Streaming cross-entropy over sequence chunks (no [B,S,V] logits;
+    sum_scan keeps backward memory at one chunk's logits)."""
+    x, aux, _ = forward_trunk(cfg, params, tokens)
+    b, s, d = x.shape
+    cs = min(cfg.loss_chunk, s)
+    n_chunks = s // cs
+    vp = cfg.vocab_padded
+    vocab_mask = (jnp.arange(vp) < cfg.vocab)[None, None, :]
+
+    def chunk(xc_tc):
+        xc, tc = xc_tc
+        logits = mm(xc, params["unembed"])                  # [B, cs, Vp] f32
+        logits = softcap(logits, cfg.final_softcap)
+        logits = jnp.where(vocab_mask, logits, -1e9)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - picked)
+
+    if n_chunks == 1:
+        total = chunk((x, targets))
+    else:
+        from .scan_utils import sum_scan
+        xs = (x.reshape(b, n_chunks, cs, d).transpose(1, 0, 2, 3),
+              targets.reshape(b, n_chunks, cs).transpose(1, 0, 2))
+        total = sum_scan(chunk, xs)
+    return total / (b * s) + aux
+
+
+# ------------------------------------------------------------------ serving
+def make_cache_shapes(cfg: TransformerConfig, batch: int, max_seq: int):
+    sh = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(sh, BF16),
+            "v": jax.ShapeDtypeStruct(sh, BF16)}
+
+
+def prefill(cfg: TransformerConfig, params, tokens):
+    """Full-sequence prefill: returns (last-position logits [B, Vp], cache)."""
+    x, _, kvs = forward_trunk(cfg, params, tokens, return_kv=True)
+    k, v = kvs                                    # [L, B, S, Hkv, Dh]
+    logits = mm(x[:, -1], params["unembed"])
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, {"k": k.astype(BF16), "v": v.astype(BF16)}
+
+
+def decode_step(cfg: TransformerConfig, params, cache, tokens, position):
+    """One decode step.  tokens: [B] int32; position: scalar int32 (the slot
+    the new token occupies; cache holds ``position`` valid entries).
+
+    Unrolled over layers so gemma2's local layers use static sliding-window
+    cache reads (sub-quadratic decode at 512k context).
+    """
+    b = tokens.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = jnp.take(params["embed"], tokens, axis=0).astype(BF16)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), BF16)
+    pos = jnp.broadcast_to(position, (b, 1))
+    k_cache, v_cache = cache["k"], cache["v"]
+
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], params["layers"])
+        h = rms_norm(x, p["attn_norm"])
+        q = mm(h, p["wq"]).reshape(b, 1, hq, dh)
+        k = mm(h, p["wk"]).reshape(b, 1, hkv, dh)
+        v = mm(h, p["wv"]).reshape(b, 1, hkv, dh)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None].astype(BF16), (i, 0, position, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None].astype(BF16), (i, 0, position, 0, 0))
+        window = cfg.window if cfg.is_local(i) else None
+        attn = decode_attention(
+            q[:, 0], k_cache[i], v_cache[i], position,
+            window=window, logit_cap=cfg.attn_softcap)
+        attn_out = mm(attn.reshape(b, hq * dh).astype(BF16), p["wo"])
+        if cfg.use_post_norms:
+            attn_out = rms_norm(attn_out, p["post_attn_norm"])
+        x = x + attn_out.astype(BF16)
+        ffn_out, _ = _ffn_block(cfg, p, x[:, None])
+        x = x + ffn_out[:, 0].astype(BF16)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = mm(x, params["unembed"])
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, {"k": k_cache, "v": v_cache}

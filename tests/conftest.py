@@ -1,0 +1,3 @@
+import os
+# smoke tests and benches must see 1 device (the dry-run sets its own flag)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

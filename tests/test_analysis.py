@@ -1,0 +1,80 @@
+"""Dry-run HLO parsing + roofline math + sharding resolution."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+import jax
+
+from repro.analysis.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                     roofline_terms)
+from repro.launch.dryrun import parse_collective_bytes, _extrapolate
+from repro.models.sharding import LM_RULES, resolve
+
+
+HLO = """
+ENTRY main {
+  %x = f32[128,4096]{1,0} parameter(0)
+  %ag = f32[2048,4096]{1,0} all-gather(f32[128,4096]{1,0} %x), dims={0}
+  %ar = bf16[512,512]{1,0} all-reduce(bf16[512,512]{1,0} %y), to_apply=%add
+  %rs = f32[8,16]{1,0} reduce-scatter(f32[128,16]{1,0} %z), dimensions={0}
+  %a2a = f32[64,64]{1,0} all-to-all(f32[64,64]{1,0} %w), dimensions={0}
+  %cp = u32[32]{0} collective-permute(u32[32]{0} %v), source_target_pairs={{0,1}}
+  %ars = f32[4,4] all-reduce-start(f32[4,4] %q), to_apply=%add
+  %ard = f32[4,4] all-reduce-done(f32[4,4] %ars)
+}
+"""
+
+
+def test_parse_collective_bytes():
+    out = parse_collective_bytes(HLO)
+    assert out["all-gather"]["operand_bytes"] == 128 * 4096 * 4
+    assert out["all-reduce"]["operand_bytes"] == 512 * 512 * 2 + 4 * 4 * 4
+    assert out["all-reduce"]["count"] == 2       # ar + ar-start (done skipped)
+    assert out["reduce-scatter"]["operand_bytes"] == 128 * 16 * 4
+    assert out["all-to-all"]["operand_bytes"] == 64 * 64 * 4
+    assert out["collective-permute"]["operand_bytes"] == 32 * 4
+
+
+def test_extrapolation_affine():
+    m1 = dict(flops=10.0, transcendentals=1.0, bytes_accessed=100.0,
+              collectives={"all-reduce": {"count": 2, "operand_bytes": 20}})
+    m2 = dict(flops=16.0, transcendentals=1.0, bytes_accessed=130.0,
+              collectives={"all-reduce": {"count": 4, "operand_bytes": 40}})
+    est = _extrapolate(m1, m2, 2, 4, 10)
+    assert est["flops"] == pytest.approx(10 + 8 * 3)       # f(2) + (10-2)*3
+    assert est["bytes_accessed"] == pytest.approx(100 + 8 * 15)
+    assert est["collectives"]["all-reduce"]["operand_bytes"] == 100
+
+
+def test_roofline_terms():
+    rec = dict(ok=True, arch="a", shape="s", mesh="single",
+               mesh_shape={"data": 16, "model": 16},
+               meta=dict(kind="train", tokens=1000, active_params=2000,
+                         params=2000),
+               cost=dict(flops=PEAK_FLOPS, transcendentals=0,
+                         bytes_accessed=HBM_BW / 2),
+               collectives={"all-reduce": {"count": 1,
+                                           "operand_bytes": LINK_BW // 4}},
+               memory=dict(peak_bytes=2 ** 30))
+    t = roofline_terms(rec)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(0.5)
+    assert t["collective_s"] == pytest.approx(0.25)
+    assert t["dominant"] == "compute"
+    assert t["roofline_fraction"] == pytest.approx(1.0)
+    assert t["model_flops"] == 6 * 2000 * 1000
+
+
+def test_resolve_divisibility():
+    devs = np.asarray(jax.devices() * 256)[:256].reshape(16, 16)
+    mesh = Mesh(devs, ("data", "model"))
+    # divisible → sharded
+    assert resolve(mesh, LM_RULES, ("vocab",), (256000,)) == P("model")
+    # non-divisible → replicated
+    assert resolve(mesh, LM_RULES, ("kv_heads",), (2,)) == P(None)
+    # tuple axes trimmed to divisible prefix
+    spec = resolve(mesh, LM_RULES, ("batch",), (16,))
+    assert spec == P("data")          # pod absent, 16 % 16 == 0
+    # missing mesh axes dropped silently
+    assert resolve(mesh, {"x": "pod"}, ("x",), (64,)) == P(None)
