@@ -43,55 +43,89 @@ class MiningResult:
     completed: bool = True
 
 
+class TopKPatternMiner:
+    """Steppable form of Algorithm 2: :meth:`step` pops and processes one
+    group from the priority heap.
+
+    :func:`topk_frequent_patterns` is the run-to-completion loop; the
+    service scheduler (DESIGN.md §9.2) interleaves `step` calls of many
+    queries instead — both drive this single implementation, so the
+    prioritize/prune semantics cannot diverge between them.
+    """
+
+    def __init__(self, g: GraphStore, m_edges: int, k: int = 1,
+                 max_candidates: int = 50_000_000):
+        self.g = g
+        self.m_edges = m_edges
+        self.k = k
+        self.max_candidates = max_candidates
+        groups = seed_groups(g)
+        self.candidates = sum(len(gr.embeddings) for gr in groups.values())
+        self._counter = itertools.count()
+        self._pq: List[tuple] = []
+        for code, gr in groups.items():
+            sup = gr.support()
+            # max-heap via negated lexicographic (m, f)
+            heapq.heappush(self._pq,
+                           ((-len(code), -sup), next(self._counter), gr, sup))
+        self._results: List[Tuple[int, Code]] = []  # (support, code), sorted
+        self.steps = 0
+        self.expanded = 0
+        self.pruned = 0
+        self.completed = True     # False once the candidate budget is hit
+        self.done = not self._pq
+
+    def _kth_support(self) -> Optional[int]:
+        return (self._results[self.k - 1][0]
+                if len(self._results) >= self.k else None)
+
+    def step(self) -> None:
+        if self.done:
+            return
+        self.steps += 1
+        _, _, gr, sup = heapq.heappop(self._pq)
+        thr = self._kth_support()
+        # relevant(S): pattern of exactly M edges → result candidate
+        if gr.num_edges == self.m_edges:
+            if thr is None or sup >= thr:
+                self._results.append((sup, gr.code))
+                self._results.sort(key=lambda t: (-t[0], t[1]))
+                del self._results[self.k:]
+        # dominated(S, kth): anti-monotone support bound
+        elif thr is not None and sup < thr:
+            self.pruned += 1
+        else:
+            children, created = expand_group(self.g, gr)
+            self.candidates += created
+            self.expanded += 1
+            if self.candidates > self.max_candidates:
+                self.completed = False
+                self.done = True
+                return
+            thr = self._kth_support()
+            for code, child in children.items():
+                csup = child.support()
+                if thr is not None and csup < thr:    # line 26 pruning
+                    self.pruned += 1
+                    continue
+                heapq.heappush(self._pq, ((-len(code), -csup),
+                                          next(self._counter), child, csup))
+        if not self._pq:
+            self.done = True
+
+    def result(self) -> MiningResult:
+        return MiningResult([(s, c) for s, c in self._results],
+                            self.candidates, self.expanded, self.pruned,
+                            completed=self.completed)
+
+
 def topk_frequent_patterns(g: GraphStore, m_edges: int, k: int = 1,
                            max_candidates: int = 50_000_000) -> MiningResult:
     """Nuri: prioritized + pruned top-k mining of M-edge patterns (Alg. 2)."""
-    groups = seed_groups(g)
-    candidates = sum(len(gr.embeddings) for gr in groups.values())
-    counter = itertools.count()
-    pq: List[tuple] = []
-    for code, gr in groups.items():
-        sup = gr.support()
-        # max-heap via negated lexicographic (m, f)
-        heapq.heappush(pq, ((-len(code), -sup), next(counter), gr, sup))
-
-    results: List[Tuple[int, Code]] = []   # (support, code), kept sorted
-    expanded = pruned = 0
-
-    def kth_support() -> Optional[int]:
-        return results[k - 1][0] if len(results) >= k else None
-
-    while pq:
-        _, _, gr, sup = heapq.heappop(pq)
-        thr = kth_support()
-        # relevant(S): pattern of exactly M edges → result candidate
-        if gr.num_edges == m_edges:
-            if thr is None or sup >= thr:
-                results.append((sup, gr.code))
-                results.sort(key=lambda t: (-t[0], t[1]))
-                del results[k:]
-            continue                        # M-edge groups are not expanded
-        # dominated(S, kth): anti-monotone support bound
-        if thr is not None and sup < thr:
-            pruned += 1
-            continue
-        children, created = expand_group(g, gr)
-        candidates += created
-        expanded += 1
-        if candidates > max_candidates:
-            return MiningResult([(s, c) for s, c in results], candidates,
-                                expanded, pruned, completed=False)
-        thr = kth_support()
-        for code, child in children.items():
-            csup = child.support()
-            if thr is not None and csup < thr:    # line 26 pruning
-                pruned += 1
-                continue
-            heapq.heappush(pq, ((-len(code), -csup), next(counter),
-                                child, csup))
-
-    return MiningResult([(s, c) for s, c in results], candidates,
-                        expanded, pruned)
+    miner = TopKPatternMiner(g, m_edges, k, max_candidates)
+    while not miner.done:
+        miner.step()
+    return miner.result()
 
 
 def arabesque_style_mining(g: GraphStore, m_edges: int, threshold: int,

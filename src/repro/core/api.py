@@ -69,6 +69,16 @@ class SubgraphComputation:
     # pretty-printer for result states (host-side)
     describe: Optional[Callable] = None
 
+    def __post_init__(self):
+        if self.state_width <= 0:
+            raise ValueError(
+                f"{self.name}: state_width must be positive, "
+                f"got {self.state_width}")
+        if self.num_actions <= 0:
+            raise ValueError(
+                f"{self.name}: num_actions must be positive, "
+                f"got {self.num_actions}")
+
 
 def from_pointwise(name: str,
                    state_width: int,

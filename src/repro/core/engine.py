@@ -59,8 +59,34 @@ class EngineResult:
     refilled: int
 
 
+@dataclasses.dataclass
+class EngineState:
+    """Resumable per-query engine state (DESIGN.md §9).
+
+    One super-step maps ``EngineState -> EngineState``; :meth:`Engine.run`
+    is just a loop over :meth:`Engine.step`, which lets an external
+    scheduler (``repro.service.scheduler``) interleave super-steps of many
+    live queries on one device without any engine changes.
+    """
+
+    pool_states: jnp.ndarray      # [C, S]
+    pool_prio: jnp.ndarray        # [C]
+    pool_ub: jnp.ndarray          # [C]
+    result_states: jnp.ndarray    # [k, S]
+    result_keys: jnp.ndarray      # [k]
+    vpq: VirtualPriorityQueue
+    steps: int = 0
+    candidates: int = 0
+    expanded: int = 0
+    pruned: int = 0
+    refilled: int = 0
+    threshold: int = int(NEG)
+    pool_occupancy: int = 0
+    done: bool = False            # pool and VPQ both drained
+
+
 class Engine:
-    """Runs one :class:`SubgraphComputation` to completion."""
+    """Runs one :class:`SubgraphComputation` to completion (or stepwise)."""
 
     def __init__(self, comp: SubgraphComputation, config: EngineConfig):
         self.comp = comp
@@ -159,15 +185,15 @@ class Engine:
         return (cat_states[order[:C]], cat_prio[order[:C]], cat_ub[order[:C]],
                 cat_states[over], cat_prio[over], cat_ub[over])
 
-    # ------------------------------------------------------------------- run
-    def run(self, progress_every: int = 0) -> EngineResult:
+    # ----------------------------------------------------------------- start
+    def start(self) -> EngineState:
+        """Seed the frontier and return a resumable :class:`EngineState`."""
         cfg, S, C, k = self.cfg, self.S, self.C, self.k
         vpq = VirtualPriorityQueue(
             state_width=S, backend=cfg.spill, spill_dir=cfg.spill_dir)
 
         states0, prio0, ub0 = self.comp.init_frontier()
         n0 = states0.shape[0]
-        candidates = int(n0)
 
         pool_states = jnp.zeros((C, S), jnp.int32)
         pool_prio = jnp.full((C,), NEG, jnp.int32)
@@ -186,49 +212,72 @@ class Engine:
             pool_ub = jnp.asarray(ub0[:C])
             vpq.maybe_push(states0[C:], prio0[C:], ub0[C:])
 
-        result_states = jnp.zeros((k, S), jnp.int32)
-        result_keys = jnp.full((k,), NEG, jnp.int32)
+        return EngineState(
+            pool_states=pool_states, pool_prio=pool_prio, pool_ub=pool_ub,
+            result_states=jnp.zeros((k, S), jnp.int32),
+            result_keys=jnp.full((k,), NEG, jnp.int32),
+            vpq=vpq, candidates=int(n0), pool_occupancy=min(int(n0), C))
 
-        steps = expanded = pruned = refilled = 0
-        threshold = int(NEG)
-        for steps in range(1, cfg.max_steps + 1):
-            (pool_states, pool_prio, pool_ub, result_states, result_keys,
-             overflow, stats) = self._step(
-                pool_states, pool_prio, pool_ub, result_states, result_keys)
-            stats = jax.tree.map(int, jax.device_get(stats))
-            expanded += stats["expanded"]
-            candidates += stats["created"]
-            pruned += stats["pruned"]
-            threshold = stats["threshold"]
-            vpq.maybe_push(*map(np.asarray, overflow))
+    # ------------------------------------------------------------------ step
+    def step(self, st: EngineState) -> EngineState:
+        """Advance one super-step; updates ``st`` in place and returns it."""
+        C = self.C
+        (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
+         st.result_keys, overflow, stats) = self._step(
+            st.pool_states, st.pool_prio, st.pool_ub,
+            st.result_states, st.result_keys)
+        stats = jax.tree.map(int, jax.device_get(stats))
+        st.steps += 1
+        st.expanded += stats["expanded"]
+        st.candidates += stats["created"]
+        st.pruned += stats["pruned"]
+        st.threshold = stats["threshold"]
+        st.vpq.maybe_push(*map(np.asarray, overflow))
 
-            occ = stats["pool_occupancy"]
-            if occ < C // 2 and len(vpq):
-                # refill from spill runs; entries dominated by the current
-                # threshold are dropped at the VPQ (paper-style late pruning)
-                r_states, r_prio, r_ub = vpq.pop_chunk(C - occ, min_ub=threshold)
-                if len(r_prio):
-                    refilled += len(r_prio)
-                    (pool_states, pool_prio, pool_ub, os_, op_, ou_) = \
-                        self._insert(pool_states, pool_prio, pool_ub,
-                                     jnp.asarray(r_states),
-                                     jnp.asarray(r_prio),
-                                     jnp.asarray(r_ub))
-                    vpq.maybe_push(np.asarray(os_), np.asarray(op_),
-                                   np.asarray(ou_))
-            if progress_every and steps % progress_every == 0:
-                print(f"[{self.comp.name}] step={steps} occ={occ} "
-                      f"vpq={len(vpq)} thr={threshold} cand={candidates}")
-            if occ == 0 and len(vpq) == 0:
-                break
+        occ = stats["pool_occupancy"]
+        refilled_now = 0
+        if occ < C // 2 and len(st.vpq):
+            # refill from spill runs; entries dominated by the current
+            # threshold are dropped at the VPQ (paper-style late pruning)
+            r_states, r_prio, r_ub = st.vpq.pop_chunk(
+                C - occ, min_ub=st.threshold)
+            if len(r_prio):
+                refilled_now = len(r_prio)
+                st.refilled += refilled_now
+                (st.pool_states, st.pool_prio, st.pool_ub, os_, op_, ou_) = \
+                    self._insert(st.pool_states, st.pool_prio, st.pool_ub,
+                                 jnp.asarray(r_states),
+                                 jnp.asarray(r_prio),
+                                 jnp.asarray(r_ub))
+                st.vpq.maybe_push(np.asarray(os_), np.asarray(op_),
+                                  np.asarray(ou_))
+        # refilled entries are live in the pool (their priorities are > NEG),
+        # so a refill that drained the VPQ must not read as completion
+        st.pool_occupancy = occ + refilled_now
+        st.done = st.pool_occupancy == 0 and len(st.vpq) == 0
+        return st
 
-        vpq.close()
+    # -------------------------------------------------------------- finalize
+    def finalize(self, st: EngineState) -> EngineResult:
+        """Close the VPQ and package the result set."""
+        st.vpq.close()
         return EngineResult(
-            result_states=np.asarray(result_states),
-            result_keys=np.asarray(result_keys),
-            steps=steps, candidates=candidates, expanded=expanded,
-            pruned=pruned, spilled=vpq.total_spilled,
-            refilled=refilled)
+            result_states=np.asarray(st.result_states),
+            result_keys=np.asarray(st.result_keys),
+            steps=st.steps, candidates=st.candidates, expanded=st.expanded,
+            pruned=st.pruned, spilled=st.vpq.total_spilled,
+            refilled=st.refilled)
+
+    # ------------------------------------------------------------------- run
+    def run(self, progress_every: int = 0) -> EngineResult:
+        st = self.start()
+        while not st.done and st.steps < self.cfg.max_steps:
+            self.step(st)
+            if progress_every and st.steps % progress_every == 0:
+                print(f"[{self.comp.name}] step={st.steps} "
+                      f"occ={st.pool_occupancy} vpq={len(st.vpq)} "
+                      f"thr={st.threshold} cand={st.candidates}")
+        return self.finalize(st)
 
 
 def make_sharded_bound_sync(axis_name: str, k: int):

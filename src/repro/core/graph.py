@@ -16,6 +16,7 @@ the engine closes over.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from functools import cached_property
 from typing import Optional
 
@@ -63,6 +64,22 @@ class GraphStore:
     def num_edges(self) -> int:
         """Number of undirected edges."""
         return len(self.indices) // 2
+
+    @cached_property
+    def fingerprint(self) -> str:
+        """Deterministic content hash of the graph (topology + labels).
+
+        Keys the service result cache (DESIGN.md §9): two GraphStores with
+        identical CSR and labels hash identically regardless of how they
+        were built.
+        """
+        h = hashlib.sha256()
+        h.update(np.int64(self.n).tobytes())
+        h.update(np.ascontiguousarray(self.indptr, np.int64).tobytes())
+        h.update(np.ascontiguousarray(self.indices, np.int64).tobytes())
+        if self.labels is not None:
+            h.update(np.ascontiguousarray(self.labels, np.int64).tobytes())
+        return h.hexdigest()
 
     @cached_property
     def degrees(self) -> np.ndarray:

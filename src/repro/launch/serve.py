@@ -1,11 +1,20 @@
-"""Batched serving driver: prefill + decode loop with a KV cache.
+"""Serving drivers.
 
-Smoke-scale on CPU (``--preset smoke``); the full-scale variants are the
-``prefill_32k`` / ``decode_32k`` / ``long_500k`` dry-run cells.
+Two modes share this entry point:
+
+* ``--mode lm`` (default) — batched LM serving: prefill + decode loop with
+  a KV cache.  Smoke-scale on CPU; the full-scale variants are the
+  ``prefill_32k`` / ``decode_32k`` / ``long_500k`` dry-run cells.
+* ``--mode discovery`` — the multi-query subgraph-discovery request loop
+  (DESIGN.md §9): JSONL requests in, JSON responses out, executed by
+  :class:`repro.service.DiscoveryService` (round-robin scheduler + result
+  cache) against a registry of demo graphs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import numpy as np
@@ -55,13 +64,94 @@ def serve(arch_name: str = "gemma2-9b", batch: int = 4, prompt_len: int = 32,
                                                               1e-9))
 
 
+def make_demo_registry():
+    """Demo graphs the discovery loop serves out of the box."""
+    from repro.data.synthetic_graphs import (labeled_graph,
+                                             planted_clique_graph)
+    from repro.service import GraphRegistry
+
+    registry = GraphRegistry()
+    registry.register("demo-social",
+                      planted_clique_graph(n=200, m=1200, clique_size=7,
+                                           seed=7))
+    registry.register("demo-citeseer", labeled_graph(120, 500, 4, seed=11))
+    return registry
+
+
+def serve_discovery(lines=None, out=None, slice_steps: int = 1,
+                    batch_size: int = 8):
+    """Minimal request loop: one JSON request per input line, one JSON
+    response per output line (order-preserving).
+
+    Requests are grouped into batches of ``batch_size`` and each batch's
+    cache misses run concurrently under the round-robin scheduler; repeats
+    within and across batches hit the result cache.
+    """
+    from repro.service import (DiscoveryRequest, DiscoveryResponse,
+                               DiscoveryService)
+
+    svc = DiscoveryService(registry=make_demo_registry(),
+                           slice_steps=slice_steps)
+    lines = sys.stdin if lines is None else lines
+    out = sys.stdout if out is None else out
+
+    batch = []
+
+    def flush():
+        if not batch:
+            return
+        for resp in svc.serve(batch):
+            # flush per line so pipe/socket consumers see responses as
+            # they are produced, not when the process exits
+            print(resp.to_json(), file=out, flush=True)
+        batch.clear()
+
+    for line in lines:
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        d = {}
+        try:
+            d = json.loads(line)
+            req = DiscoveryRequest.from_dict(d)
+        except (ValueError, TypeError) as e:
+            flush()   # keep responses in request order
+            d = d if isinstance(d, dict) else {}
+            print(DiscoveryResponse(
+                request_id=d.get("request_id"),
+                workload=str(d.get("workload", "unknown")),
+                status="error", error=str(e)).to_json(),
+                file=out, flush=True)
+            continue
+        batch.append(req)
+        if len(batch) >= batch_size:
+            flush()
+    flush()
+    return svc
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "discovery"], default="lm")
     ap.add_argument("--arch", default="gemma2-9b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--requests", default=None,
+                    help="discovery mode: JSONL request file (default stdin)")
+    ap.add_argument("--slice-steps", type=int, default=1)
     args = ap.parse_args()
+    if args.mode == "discovery":
+        lines = open(args.requests) if args.requests else None
+        try:
+            svc = serve_discovery(lines=lines, slice_steps=args.slice_steps)
+        finally:
+            if lines is not None:
+                lines.close()
+        print(f"[serve] {svc.requests_served} requests, "
+              f"{svc.engine_steps_total} engine steps, "
+              f"cache {svc.cache.stats()}", file=sys.stderr)
+        return
     r = serve(args.arch, args.batch, args.prompt_len, args.decode_steps)
     print(f"[serve] prefill {r['prefill_s']:.2f}s, "
           f"decode {r['decode_s']:.2f}s "

@@ -1,0 +1,23 @@
+"""Multi-query discovery service on the Nuri engine (DESIGN.md §9).
+
+Layers, bottom-up:
+
+* :mod:`repro.service.api` — :class:`DiscoveryRequest` /
+  :class:`DiscoveryResponse`, validation, the graph registry, and the
+  compile step onto :class:`repro.core.api.SubgraphComputation`;
+* :mod:`repro.service.cache` — deterministic LRU+TTL result cache keyed by
+  (graph fingerprint, canonical query spec);
+* :mod:`repro.service.scheduler` — per-query tasks, the round-robin
+  super-step scheduler, and the :class:`DiscoveryService` facade.
+"""
+from .api import (DiscoveryRequest, DiscoveryResponse, GraphRegistry,
+                  ValidationError, WORKLOADS, compile_request)
+from .cache import ResultCache, make_cache_key
+from .scheduler import DiscoveryService, QueryScheduler
+
+__all__ = [
+    "DiscoveryRequest", "DiscoveryResponse", "GraphRegistry",
+    "ValidationError", "WORKLOADS", "compile_request",
+    "ResultCache", "make_cache_key",
+    "DiscoveryService", "QueryScheduler",
+]

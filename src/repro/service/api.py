@@ -1,0 +1,275 @@
+"""Discovery-service request/response schema (DESIGN.md §9, docs/API.md).
+
+A :class:`DiscoveryRequest` is a declarative query spec — workload, graph
+handle, ``k``, and budgets — that :func:`compile_request` turns into the
+engine-facing form: a :class:`repro.core.api.SubgraphComputation` plus an
+:class:`repro.core.engine.EngineConfig` for the queue-driven workloads
+(clique / weighted-clique / iso), or an aggregate-model mining task for
+``pattern``.  Validation happens eagerly at submit time so malformed
+queries are rejected before any device work, mirroring the query-driven
+front-end of Dasgupta & Gupta (arXiv:2102.09120).
+
+Graphs are referred to by *handle* (a registry name), never shipped inline;
+the registry resolves handles to :class:`repro.core.graph.GraphStore` and
+exposes each graph's content :attr:`~repro.core.graph.GraphStore.fingerprint`
+for cache keying.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import EngineConfig
+from repro.core.graph import GraphStore
+
+from .cache import ResultCache
+
+WORKLOADS = ("clique", "weighted-clique", "iso", "pattern")
+
+
+class ValidationError(ValueError):
+    """A malformed :class:`DiscoveryRequest` (rejected before execution)."""
+
+
+class GraphRegistry:
+    """Named graph handles -> :class:`GraphStore` (the service's data tier)."""
+
+    def __init__(self):
+        self._graphs: Dict[str, GraphStore] = {}
+
+    def register(self, name: str, graph: GraphStore) -> None:
+        if not isinstance(graph, GraphStore):
+            raise TypeError(f"{name}: expected a GraphStore")
+        self._graphs[name] = graph
+
+    def get(self, name: str) -> GraphStore:
+        if name not in self._graphs:
+            raise ValidationError(
+                f"unknown graph handle {name!r}; registered: "
+                f"{sorted(self._graphs)}")
+        return self._graphs[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._graphs
+
+    def names(self) -> List[str]:
+        return sorted(self._graphs)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiscoveryRequest:
+    """One top-k discovery query (fields documented in docs/API.md)."""
+
+    graph: str                        # registry handle
+    workload: str                     # clique | weighted-clique | iso | pattern
+    k: int = 1
+    # budgets / execution knobs
+    batch: int = 64                   # B: states dequeued per super-step
+    pool_capacity: int = 4096         # C: device pool slots
+    step_budget: int = 100_000        # max engine super-steps for this query
+    candidate_budget: Optional[int] = None  # max subgraphs materialized
+    # workload-specific parameters
+    weights: Optional[Tuple[int, ...]] = None             # weighted-clique
+    q_edges: Optional[Tuple[Tuple[int, int], ...]] = None  # iso query graph
+    q_labels: Optional[Tuple[int, ...]] = None             # iso query labels
+    induced: bool = True                                   # iso semantics
+    max_hops: int = 2                                      # iso index depth
+    m_edges: Optional[int] = None                          # pattern size
+    use_pallas: bool = False                               # clique kernel
+    # service knobs
+    use_cache: bool = True
+    request_id: Optional[str] = None
+
+    # ------------------------------------------------------------- building
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "DiscoveryRequest":
+        """Build from a JSON-decoded dict (lists become tuples)."""
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValidationError(f"unknown request fields: {sorted(unknown)}")
+        try:
+            for f in ("k", "batch", "pool_capacity", "step_budget",
+                      "candidate_budget", "max_hops", "m_edges"):
+                if d.get(f) is not None:
+                    d[f] = int(d[f])
+            for f in ("induced", "use_pallas", "use_cache"):
+                if d.get(f) is not None:
+                    d[f] = bool(d[f])
+            if d.get("weights") is not None:
+                d["weights"] = tuple(int(w) for w in d["weights"])
+            if d.get("q_edges") is not None:
+                d["q_edges"] = tuple((int(a), int(b)) for a, b in d["q_edges"])
+            if d.get("q_labels") is not None:
+                d["q_labels"] = tuple(int(l) for l in d["q_labels"])
+        except (TypeError, ValueError) as e:
+            raise ValidationError(f"malformed request field: {e}") from e
+        return cls(**d)
+
+    # ----------------------------------------------------------- validation
+    def validate(self, registry: GraphRegistry) -> GraphStore:
+        """Check the spec against the registry; returns the resolved graph."""
+        if self.workload not in WORKLOADS:
+            raise ValidationError(
+                f"workload must be one of {WORKLOADS}, got {self.workload!r}")
+        if self.k <= 0:
+            raise ValidationError(f"k must be >= 1, got {self.k}")
+        if self.batch <= 0:
+            raise ValidationError(f"batch must be >= 1, got {self.batch}")
+        if self.pool_capacity < self.batch:
+            raise ValidationError(
+                f"pool_capacity ({self.pool_capacity}) must be >= batch "
+                f"({self.batch})")
+        if self.step_budget <= 0:
+            raise ValidationError(
+                f"step_budget must be >= 1, got {self.step_budget}")
+        if self.candidate_budget is not None and self.candidate_budget <= 0:
+            raise ValidationError(
+                f"candidate_budget must be >= 1, got {self.candidate_budget}")
+        g = registry.get(self.graph)
+
+        if self.workload == "weighted-clique":
+            if self.weights is None:
+                raise ValidationError("weighted-clique requires `weights`")
+            if len(self.weights) != g.n:
+                raise ValidationError(
+                    f"weights has {len(self.weights)} entries for an "
+                    f"{g.n}-vertex graph")
+            if any(w <= 0 for w in self.weights):
+                raise ValidationError("weights must be positive integers")
+        elif self.workload == "iso":
+            if self.q_edges is None or self.q_labels is None:
+                raise ValidationError("iso requires `q_edges` and `q_labels`")
+            if g.labels is None:
+                raise ValidationError(
+                    f"iso requires a labeled graph; {self.graph!r} is "
+                    "unlabeled")
+            nq = len(self.q_labels)
+            if nq == 0:
+                raise ValidationError("iso query graph is empty")
+            for a, b in self.q_edges:
+                if not (0 <= a < nq and 0 <= b < nq) or a == b:
+                    raise ValidationError(
+                        f"iso query edge ({a}, {b}) out of range for "
+                        f"{nq} query vertices")
+            if self.max_hops <= 0:
+                raise ValidationError(
+                    f"max_hops must be >= 1, got {self.max_hops}")
+        elif self.workload == "pattern":
+            if self.m_edges is None or self.m_edges <= 0:
+                raise ValidationError(
+                    "pattern requires `m_edges` >= 1")
+            if g.labels is None:
+                raise ValidationError(
+                    f"pattern mining requires a labeled graph; "
+                    f"{self.graph!r} is unlabeled")
+        return g
+
+    # -------------------------------------------------------- canonical form
+    def canonical_spec(self) -> Dict[str, Any]:
+        """Canonical, JSON-stable dict of everything that determines the
+        *result* of this request — the cache-key payload.
+
+        Excludes ``use_cache`` and ``request_id`` (service plumbing).  Query
+        edges are normalized to sorted ``(min, max)`` pairs so isomorphic
+        edge orderings of the same query graph key identically.
+        """
+        spec: Dict[str, Any] = dict(
+            workload=self.workload, k=self.k, batch=self.batch,
+            pool_capacity=self.pool_capacity, step_budget=self.step_budget,
+            candidate_budget=self.candidate_budget)
+        if self.workload == "weighted-clique":
+            spec["weights"] = list(self.weights)
+        elif self.workload == "iso":
+            spec["q_edges"] = sorted(
+                [min(a, b), max(a, b)] for a, b in self.q_edges)
+            spec["q_labels"] = list(self.q_labels)
+            spec["induced"] = self.induced
+            spec["max_hops"] = self.max_hops
+        elif self.workload == "pattern":
+            spec["m_edges"] = self.m_edges
+        return spec
+
+
+@dataclasses.dataclass
+class DiscoveryResponse:
+    """Service reply: top-k results plus execution accounting."""
+
+    request_id: Optional[str]
+    workload: str
+    status: str                       # "ok" | "error"
+    result_keys: List[int] = dataclasses.field(default_factory=list)
+    results: List[Any] = dataclasses.field(default_factory=list)
+    stats: Dict[str, int] = dataclasses.field(default_factory=dict)
+    terminated: str = "complete"      # complete | step_budget | candidate_budget
+    cached: bool = False
+    latency_s: float = 0.0
+    error: Optional[str] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+
+# ------------------------------------------------------------------ compile
+@dataclasses.dataclass(frozen=True)
+class CompiledQuery:
+    """A validated request lowered to its executable form."""
+
+    request: DiscoveryRequest
+    graph: GraphStore
+    kind: str                                     # "engine" | "aggregate"
+    comp: Optional[object] = None                 # SubgraphComputation
+    engine_cfg: Optional[EngineConfig] = None
+
+
+# per-(graph fingerprint, max_hops) iso index cache: building the Fig.-7
+# index is a dense-matmul preprocessing pass, amortized across requests.
+# LRU-bounded so long-lived services that cycle graphs don't leak indexes.
+_ISO_INDEX_CACHE = ResultCache(capacity=16, ttl_s=float("inf"))
+
+
+def _iso_index(g: GraphStore, max_hops: int) -> np.ndarray:
+    from repro.core.iso import build_iso_index
+    key = f"{g.fingerprint}:{max_hops}"
+    index = _ISO_INDEX_CACHE.get(key)
+    if index is None:
+        index = build_iso_index(g, max_hops)
+        _ISO_INDEX_CACHE.put(key, index)
+    return index
+
+
+def compile_request(req: DiscoveryRequest, registry: GraphRegistry,
+                    graph: Optional[GraphStore] = None) -> CompiledQuery:
+    """Validate and lower a request onto the core computational models.
+
+    ``graph`` short-circuits validation when the caller has already run
+    :meth:`DiscoveryRequest.validate` (the service's serve loop does).
+    """
+    g = graph if graph is not None else req.validate(registry)
+    if req.workload == "pattern":
+        return CompiledQuery(request=req, graph=g, kind="aggregate")
+
+    if req.workload == "clique":
+        from repro.core.clique import make_clique_computation
+        comp = make_clique_computation(g, use_pallas=req.use_pallas)
+    elif req.workload == "weighted-clique":
+        from repro.core.weighted_clique import make_weighted_clique_computation
+        comp = make_weighted_clique_computation(
+            g, np.asarray(req.weights, np.int32))
+    else:  # iso
+        from repro.core.iso import make_iso_computation
+        comp = make_iso_computation(
+            g, list(req.q_edges), list(req.q_labels),
+            _iso_index(g, req.max_hops), induced=req.induced)
+
+    cfg = EngineConfig(k=req.k, batch=req.batch,
+                       pool_capacity=req.pool_capacity,
+                       max_steps=req.step_budget)
+    return CompiledQuery(request=req, graph=g, kind="engine",
+                         comp=comp, engine_cfg=cfg)

@@ -1,0 +1,298 @@
+"""Multi-query scheduler + the discovery service facade (DESIGN.md §9.2).
+
+The engine's super-step is pure per-query state-in/state-out
+(:class:`repro.core.engine.EngineState`), so serving many concurrent
+queries is a *scheduling* problem, not an engine problem: this module
+round-robins super-steps across all live queries, giving every query
+forward progress while long-running ones keep the device busy.  Each query
+keeps its own device pool, result set, and VPQ, so interleaving cannot
+change any query's answer — a scheduled query returns exactly what a
+dedicated ``Engine.run()`` would (asserted in ``tests/test_service.py``).
+
+``pattern`` queries run on the aggregate model (host-side group heap,
+vectorized embedding extension); one scheduler step processes one group
+pop, mirroring :func:`repro.core.aggregate.topk_frequent_patterns` exactly.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from typing import Dict, List, Optional
+
+
+from repro.core.aggregate import TopKPatternMiner
+from repro.core.engine import NEG, Engine
+from repro.core.graph import GraphStore
+
+from .api import (DiscoveryRequest, DiscoveryResponse, GraphRegistry,
+                  ValidationError, compile_request)
+from .cache import ResultCache, make_cache_key
+
+
+# ------------------------------------------------------------------- tasks
+class EngineQueryTask:
+    """One queue-driven query (clique / weighted-clique / iso) being stepped.
+
+    ``engine`` may be shared across tasks with the identical compiled spec
+    (the service's engine cache): all per-query search state lives in
+    ``self.state``, so a shared engine only shares the jitted step —
+    avoiding an XLA re-trace per request.
+    """
+
+    def __init__(self, request: DiscoveryRequest, engine: Engine):
+        self.request = request
+        self.comp = engine.comp
+        self.engine = engine
+        self.state = engine.start()
+        self.terminated: Optional[str] = None
+        self._payload: Optional[dict] = None
+        if self._over_candidate_budget():   # seed frontier alone may exceed
+            self.terminated = "candidate_budget"
+
+    def _over_candidate_budget(self) -> bool:
+        budget = self.request.candidate_budget
+        return budget is not None and self.state.candidates >= budget
+
+    @property
+    def finished(self) -> bool:
+        return self.terminated is not None
+
+    def step(self) -> None:
+        if self.finished:
+            return
+        self.engine.step(self.state)
+        # budgets come from the request, not engine.cfg: the engine may be
+        # shared with requests that differ only in budgets
+        if self.state.done:
+            self.terminated = "complete"
+        elif self.state.steps >= self.request.step_budget:
+            self.terminated = "step_budget"
+        elif self._over_candidate_budget():
+            self.terminated = "candidate_budget"
+
+    def finalize(self) -> dict:
+        if self._payload is not None:
+            return self._payload
+        res = self.engine.finalize(self.state)
+        results = []
+        for i, key in enumerate(res.result_keys):
+            if int(key) == int(NEG):
+                continue   # empty result slot (fewer than k results exist)
+            state_row = res.result_states[i]
+            results.append(self.comp.describe(state_row)
+                           if self.comp.describe else
+                           [int(x) for x in state_row])
+        self._payload = dict(
+            workload=self.request.workload,
+            result_keys=[int(x) for x in res.result_keys],
+            results=results,
+            stats=dict(steps=res.steps, candidates=res.candidates,
+                       expanded=res.expanded, pruned=res.pruned,
+                       spilled=res.spilled, refilled=res.refilled),
+            terminated=self.terminated or "complete")
+        return self._payload
+
+
+class PatternQueryTask:
+    """Top-k frequent-pattern query, stepped one group pop at a time.
+
+    Thin budget/termination wrapper over
+    :class:`repro.core.aggregate.TopKPatternMiner` — the same
+    implementation :func:`~repro.core.aggregate.topk_frequent_patterns`
+    runs to completion, so prioritization/pruning order cannot diverge
+    between scheduled and library runs.  Budget early-termination is a
+    service-level concern enforced here (inclusive, like the engine task),
+    not inside the miner.
+    """
+
+    def __init__(self, req: DiscoveryRequest, graph: GraphStore):
+        self.request = req
+        # the miner keeps its library-default runaway cap; the service
+        # budget is enforced here, between steps, with the same inclusive
+        # (>=) semantics as EngineQueryTask for every workload
+        self.miner = TopKPatternMiner(graph, req.m_edges, req.k)
+        self.terminated: Optional[str] = (
+            "complete" if self.miner.done else None)
+        self._payload: Optional[dict] = None
+        if not self.finished and self._over_candidate_budget():
+            self.terminated = "candidate_budget"   # seed embeddings alone
+
+    def _over_candidate_budget(self) -> bool:
+        budget = self.request.candidate_budget
+        return budget is not None and self.miner.candidates >= budget
+
+    @property
+    def finished(self) -> bool:
+        return self.terminated is not None
+
+    def step(self) -> None:
+        if self.finished:
+            return
+        self.miner.step()
+        if self.miner.done:
+            self.terminated = ("complete" if self.miner.completed
+                               else "candidate_budget")
+        elif self._over_candidate_budget():
+            self.terminated = "candidate_budget"
+        elif self.miner.steps >= self.request.step_budget:
+            self.terminated = "step_budget"
+
+    def finalize(self) -> dict:
+        if self._payload is not None:
+            return self._payload
+        res = self.miner.result()
+        self._payload = dict(
+            workload="pattern",
+            result_keys=[sup for sup, _ in res.patterns],
+            results=[[list(edge) for edge in code]
+                     for _, code in res.patterns],
+            stats=dict(steps=self.miner.steps, candidates=res.candidates,
+                       expanded=res.groups_expanded,
+                       pruned=res.groups_pruned, spilled=0, refilled=0),
+            terminated=self.terminated or "complete")
+        return self._payload
+
+
+# --------------------------------------------------------------- scheduler
+class QueryScheduler:
+    """Round-robins super-steps across live queries.
+
+    ``slice_steps`` is the number of consecutive super-steps a query gets
+    per scheduling turn — 1 is fair round-robin; larger values amortize
+    host-side scheduling overhead at the cost of per-query latency spread.
+    """
+
+    def __init__(self, slice_steps: int = 1):
+        assert slice_steps >= 1
+        self.slice_steps = slice_steps
+
+    def drive(self, tasks: List) -> None:
+        """Step all tasks to completion, interleaved."""
+        live = [t for t in tasks if not t.finished]
+        while live:
+            for task in live:
+                for _ in range(self.slice_steps):
+                    task.step()
+                    if task.finished:
+                        break
+            live = [t for t in live if not t.finished]
+
+
+# ----------------------------------------------------------------- service
+class DiscoveryService:
+    """Request validation -> cache lookup -> scheduled execution -> response.
+
+    The unit of service work is a *batch* of requests (:meth:`serve`): all
+    cache misses in the batch run concurrently under one
+    :class:`QueryScheduler`.  ``engine_steps_total`` counts every engine
+    super-step executed on behalf of this service — cache hits add zero.
+    """
+
+    def __init__(self, registry: Optional[GraphRegistry] = None,
+                 cache: Optional[ResultCache] = None,
+                 slice_steps: int = 1, engine_cache_size: int = 32):
+        self.registry = registry or GraphRegistry()
+        self.cache = cache or ResultCache()
+        self.scheduler = QueryScheduler(slice_steps=slice_steps)
+        # compiled-engine reuse: identical specs (same cache key) share one
+        # Engine and therefore one XLA trace of the super-step; all search
+        # state is per-task (EngineState), so sharing is safe even within
+        # a batch.  LRU-bounded; TTL is irrelevant for compiled code.
+        self._engines = ResultCache(capacity=engine_cache_size,
+                                    ttl_s=float("inf"))
+        self.engine_steps_total = 0
+        self.requests_served = 0
+
+    def register_graph(self, name: str, graph) -> None:
+        self.registry.register(name, graph)
+
+    # ------------------------------------------------------------ serving
+    def serve(self, requests: List[DiscoveryRequest]
+              ) -> List[DiscoveryResponse]:
+        """Serve a batch; responses come back in request order."""
+        t0 = time.perf_counter()
+        responses: List[Optional[DiscoveryResponse]] = [None] * len(requests)
+        pending: List[tuple] = []      # (indices, cache_key|None, task)
+        by_key: Dict[str, tuple] = {}  # within-batch dedup of identical specs
+
+        for i, req in enumerate(requests):
+            try:
+                # validate only — lowering to a computation is deferred to
+                # cache misses, so a cache hit costs no compile work
+                graph = req.validate(self.registry)
+                key = make_cache_key(graph.fingerprint, req.canonical_spec())
+                if req.use_cache:
+                    payload = self.cache.get(key)
+                    if payload is not None:
+                        responses[i] = self._payload_to_response(
+                            req, payload, cached=True,
+                            latency_s=time.perf_counter() - t0)
+                        continue
+                    if key in by_key:  # identical spec already in this batch
+                        by_key[key][0].append(i)
+                        continue
+                entry = ([i], key if req.use_cache else None,
+                         self._make_task(req, graph))
+            except (TypeError, ValueError) as e:
+                # ValidationError and any mistyped field the validators
+                # trip over: reject this request, keep serving the batch
+                responses[i] = DiscoveryResponse(
+                    request_id=req.request_id, workload=str(req.workload),
+                    status="error", error=str(e))
+                continue
+            pending.append(entry)
+            if req.use_cache:
+                by_key[key] = entry
+
+        self.scheduler.drive([task for _, _, task in pending])
+
+        for indices, key, task in pending:
+            payload = task.finalize()
+            if isinstance(task, EngineQueryTask):
+                self.engine_steps_total += task.state.steps
+            if key is not None:
+                self.cache.put(key, payload)
+            for j, i in enumerate(indices):
+                responses[i] = self._payload_to_response(
+                    requests[i], payload, cached=j > 0,
+                    latency_s=time.perf_counter() - t0)
+
+        self.requests_served += len(requests)
+        return responses   # type: ignore[return-value]
+
+    def query(self, request: DiscoveryRequest) -> DiscoveryResponse:
+        """Single-request convenience wrapper around :meth:`serve`."""
+        return self.serve([request])[0]
+
+    def _make_task(self, req: DiscoveryRequest, graph: GraphStore):
+        if req.workload == "pattern":
+            return PatternQueryTask(req, graph)
+        # the engine key covers only what shapes the compiled step: budgets
+        # are enforced per-task (so they're dropped from the spec), while
+        # use_pallas changes the kernel without changing results (so it's
+        # added back — it is deliberately absent from the result-cache key)
+        engine_spec = req.canonical_spec()
+        engine_spec.pop("step_budget", None)
+        engine_spec.pop("candidate_budget", None)
+        engine_spec["use_pallas"] = req.use_pallas
+        engine_key = make_cache_key(graph.fingerprint, engine_spec)
+        engine = self._engines.get(engine_key)
+        if engine is None:
+            compiled = compile_request(req, self.registry, graph=graph)
+            engine = Engine(compiled.comp, compiled.engine_cfg)
+            self._engines.put(engine_key, engine)
+        return EngineQueryTask(req, engine)
+
+    @staticmethod
+    def _payload_to_response(req: DiscoveryRequest, payload: dict,
+                             cached: bool, latency_s: float
+                             ) -> DiscoveryResponse:
+        # deep copy so callers mutating a response (or its nested result
+        # lists) cannot corrupt the cached payload or sibling responses
+        payload = copy.deepcopy(payload)
+        return DiscoveryResponse(
+            request_id=req.request_id, workload=payload["workload"],
+            status="ok", result_keys=payload["result_keys"],
+            results=payload["results"], stats=payload["stats"],
+            terminated=payload["terminated"], cached=cached,
+            latency_s=latency_s)

@@ -1,0 +1,183 @@
+"""Discovery service: validation, cache determinism, eviction, scheduling."""
+import numpy as np
+import pytest
+
+from repro.core.clique import make_clique_computation
+from repro.core.engine import Engine, EngineConfig
+from repro.data.synthetic_graphs import labeled_graph, planted_clique_graph
+from repro.service import (DiscoveryRequest, DiscoveryService, GraphRegistry,
+                           ResultCache, ValidationError, make_cache_key)
+
+
+@pytest.fixture(scope="module")
+def social():
+    return planted_clique_graph(n=80, m=300, clique_size=6, seed=1)
+
+
+@pytest.fixture(scope="module")
+def cite():
+    return labeled_graph(40, 120, 3, seed=2)
+
+
+def make_service(social, cite, **kw):
+    svc = DiscoveryService(**kw)
+    svc.register_graph("social", social)
+    svc.register_graph("cite", cite)
+    return svc
+
+
+# ------------------------------------------------------------- validation
+def test_rejects_unknown_workload(social, cite):
+    svc = make_service(social, cite)
+    resp = svc.query(DiscoveryRequest(graph="social", workload="motif"))
+    assert resp.status == "error"
+    assert "workload" in resp.error
+
+
+def test_rejects_bad_k_and_budgets(social, cite):
+    svc = make_service(social, cite)
+    assert svc.query(DiscoveryRequest(
+        graph="social", workload="clique", k=0)).status == "error"
+    assert svc.query(DiscoveryRequest(
+        graph="social", workload="clique", step_budget=0)).status == "error"
+    assert svc.query(DiscoveryRequest(
+        graph="social", workload="clique",
+        candidate_budget=-5)).status == "error"
+
+
+def test_rejects_unknown_graph_and_missing_params(social, cite):
+    svc = make_service(social, cite)
+    assert svc.query(DiscoveryRequest(
+        graph="nope", workload="clique")).status == "error"
+    # weighted-clique without weights / wrong length
+    assert svc.query(DiscoveryRequest(
+        graph="social", workload="weighted-clique")).status == "error"
+    assert svc.query(DiscoveryRequest(
+        graph="social", workload="weighted-clique",
+        weights=(1, 2, 3))).status == "error"
+    # iso on an unlabeled graph
+    assert svc.query(DiscoveryRequest(
+        graph="social", workload="iso", q_edges=((0, 1),),
+        q_labels=(0, 1))).status == "error"
+    # pattern without m_edges
+    assert svc.query(DiscoveryRequest(
+        graph="cite", workload="pattern")).status == "error"
+
+
+def test_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValidationError):
+        DiscoveryRequest.from_dict(
+            dict(graph="g", workload="clique", frobnicate=1))
+
+
+# --------------------------------------------------------- cache key/LRU/TTL
+def test_cache_key_deterministic(social):
+    r1 = DiscoveryRequest(graph="social", workload="clique", k=3)
+    r2 = DiscoveryRequest(graph="social", workload="clique", k=3,
+                          request_id="different-id", use_cache=False)
+    # same semantic spec -> same key (plumbing fields are excluded)
+    k1 = make_cache_key(social.fingerprint, r1.canonical_spec())
+    k2 = make_cache_key(social.fingerprint, r2.canonical_spec())
+    assert k1 == k2
+    # different k -> different key
+    r3 = DiscoveryRequest(graph="social", workload="clique", k=4)
+    assert make_cache_key(social.fingerprint, r3.canonical_spec()) != k1
+
+
+def test_cache_key_covers_graph_and_query_graph(social, cite):
+    req = DiscoveryRequest(graph="g", workload="clique", k=2)
+    assert make_cache_key(social.fingerprint, req.canonical_spec()) != \
+        make_cache_key(cite.fingerprint, req.canonical_spec())
+    # iso edge order is canonicalized: (0,1),(1,2) == (2,1),(1,0)
+    a = DiscoveryRequest(graph="g", workload="iso",
+                         q_edges=((0, 1), (1, 2)), q_labels=(0, 1, 0))
+    b = DiscoveryRequest(graph="g", workload="iso",
+                         q_edges=((2, 1), (1, 0)), q_labels=(0, 1, 0))
+    assert a.canonical_spec() == b.canonical_spec()
+
+
+def test_lru_eviction():
+    cache = ResultCache(capacity=2, ttl_s=1e9)
+    cache.put("a", 1)
+    cache.put("b", 2)
+    assert cache.get("a") == 1          # a is now most recently used
+    cache.put("c", 3)                   # evicts b (LRU)
+    assert cache.get("b") is None
+    assert cache.get("a") == 1
+    assert cache.get("c") == 3
+    assert cache.evictions == 1
+
+
+def test_ttl_expiry():
+    now = [0.0]
+    cache = ResultCache(capacity=8, ttl_s=10.0, clock=lambda: now[0])
+    cache.put("a", 1)
+    now[0] = 5.0
+    assert cache.get("a") == 1
+    now[0] = 10.1
+    assert cache.get("a") is None
+    assert cache.expirations == 1
+
+
+# ------------------------------------------------------- scheduled execution
+def test_interleaved_matches_sequential(social):
+    """Two concurrent clique queries return byte-identical result_keys to
+    dedicated Engine.run() calls (acceptance criterion)."""
+    svc = DiscoveryService()
+    svc.register_graph("social", social)
+    reqs = [DiscoveryRequest(graph="social", workload="clique", k=3,
+                             use_cache=False),
+            DiscoveryRequest(graph="social", workload="clique", k=1,
+                             batch=32, use_cache=False)]
+    resps = svc.serve(reqs)
+
+    comp = make_clique_computation(social)
+    ref0 = Engine(comp, EngineConfig(k=3)).run()
+    ref1 = Engine(comp, EngineConfig(k=1, batch=32)).run()
+    assert resps[0].result_keys == [int(x) for x in ref0.result_keys]
+    assert resps[1].result_keys == [int(x) for x in ref1.result_keys]
+    assert resps[0].stats["candidates"] == ref0.candidates
+    assert all(r.terminated == "complete" for r in resps)
+
+
+def test_cache_hit_runs_zero_engine_steps(social, cite):
+    """A repeated identical request is served from the cache without any
+    engine super-steps (acceptance criterion, via the step counter)."""
+    svc = make_service(social, cite)
+    req = DiscoveryRequest(graph="social", workload="clique", k=2)
+    first = svc.query(req)
+    assert not first.cached and svc.engine_steps_total > 0
+    steps_before = svc.engine_steps_total
+    second = svc.query(req)
+    assert second.cached
+    assert svc.engine_steps_total == steps_before
+    assert second.result_keys == first.result_keys
+    assert second.results == first.results
+
+
+def test_candidate_budget_terminates_early(social):
+    svc = DiscoveryService()
+    svc.register_graph("social", social)
+    resp = svc.query(DiscoveryRequest(
+        graph="social", workload="clique", k=1, candidate_budget=100,
+        use_cache=False))
+    assert resp.status == "ok"
+    assert resp.terminated == "candidate_budget"
+
+
+def test_mixed_workload_batch(social, cite):
+    """clique + pattern + iso interleave in one batch and all complete."""
+    svc = make_service(social, cite)
+    l0, l1 = int(cite.labels[0]), int(cite.labels[1])
+    reqs = [
+        DiscoveryRequest(graph="social", workload="clique", k=2),
+        DiscoveryRequest(graph="cite", workload="pattern", m_edges=2, k=2),
+        DiscoveryRequest(graph="cite", workload="iso", k=2,
+                         q_edges=((0, 1),), q_labels=(l0, l1)),
+    ]
+    resps = svc.serve(reqs)
+    assert [r.status for r in resps] == ["ok"] * 3
+    for r in resps:
+        assert r.result_keys, f"{r.workload} returned no results"
+        assert len(r.results) == len(
+            [k for k in r.result_keys if k > np.iinfo(np.int32).min])
