@@ -3,11 +3,15 @@
 Query types 2 / 3P / 3C / 4P / 4C / 4G (paper §6.4) on a labeled graph;
 Nuri vs Nuri-NP (no index pruning → upper bound = +inf) vs exhaustive
 counting; plus the selectivity sweep (Fig 17): non-selective vs selective
-queries.
+queries; plus the kernel-vs-reference mode (:func:`run_candidate_paths`):
+per-state-loop vs batched vs Pallas candidate generation on one dequeued
+batch, with engine-level result parity asserted (docs/KERNELS.md).
 """
 import time
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 from repro.core.engine import Engine, EngineConfig
 from repro.core.exhaustive import brute_force_iso
@@ -73,6 +77,65 @@ def run_selectivity(n=150, m=500, seed=0):
     return rows
 
 
+CAND_PATHS = (
+    ("per-state loop", dict(cand_path="map")),
+    ("vmapped loop", dict(cand_path="vmap")),
+    ("batched jnp", {}),
+    ("pallas kernel", dict(use_pallas=True)),
+)
+
+
+def run_candidate_paths(n=150, m=500, n_labels=3, seed=0, batch=64,
+                        repeats=20, rounds=5):
+    """Kernel-vs-reference mode: time one jitted ``score_children`` call —
+    candidate generation for a whole dequeued batch — for each of the four
+    paths, on the same [batch, S] state block, and assert that full engine
+    runs return identical top-k results.
+
+    The "per-state loop" row processes dequeued states one at a time
+    (``lax.map`` — the paper's Algorithm-1 form, what targeted expansion
+    looked like before batching); "vmapped loop" is the same per-state
+    function batch-vectorized by ``vmap``; "batched jnp" is the one-shot
+    constraint product (the kernel's reference semantics); "pallas
+    kernel" additionally materializes the candidate grid through the
+    masked-intersection kernel (interpreter mode off-TPU, so its
+    wall-clock here is a correctness path, not a perf claim — see
+    docs/KERNELS.md).
+    """
+    g = labeled_graph(n, m, n_labels, seed)
+    index = build_iso_index(g, max_hops=3)
+    q_edges, nq = QUERY_TYPES["4P"]
+    q_labels = _sample_query_labels(g, nq, seed)
+    rows, keys = [], {}
+    for path, kw in CAND_PATHS:
+        comp = make_iso_computation(g, q_edges, q_labels, index, **kw)
+        states, _, _ = comp.init_frontier()
+        reps = -(-batch // states.shape[0])          # tile seeds up to batch
+        block = jnp.concatenate([states] * reps)[:batch]
+        step = jax.jit(comp.score_children)
+        jax.block_until_ready(step(block))           # compile + warm up
+        best = float("inf")                          # best-of-rounds: these
+        for _ in range(rounds):                      # calls are ~0.1 ms, so
+            t0 = time.perf_counter()                 # min filters scheduler
+            for _ in range(repeats):                 # noise out of the mean
+                out = step(block)
+            jax.block_until_ready(out)
+            best = min(best, (time.perf_counter() - t0) / repeats)
+        ms = best * 1e3
+        res = Engine(comp, EngineConfig(k=3, batch=batch,
+                                        pool_capacity=8192,
+                                        max_steps=100000)).run()
+        keys[path] = [int(x) for x in res.result_keys]
+        rows.append(dict(path=path, ms_per_call=round(ms, 3),
+                         result_keys=keys[path]))
+    assert all(k == keys["per-state loop"] for k in keys.values()), \
+        f"candidate paths disagree: {keys}"
+    base = rows[0]["ms_per_call"]
+    for r in rows:
+        r["speedup_vs_loop"] = round(base / r["ms_per_call"], 2)
+    return rows
+
+
 def main(fast: bool = False):
     rows = run(n=100 if fast else 150, m=330 if fast else 500,
                samples=2 if fast else 3)
@@ -85,7 +148,18 @@ def main(fast: bool = False):
     for r in sel:
         print(f"  {r['query']:>18}: candidates={r['candidates']} "
               f"pruned={r['pruned']} t={r['s']}s")
-    return rows + sel
+    cand_batch = 64
+    cand = run_candidate_paths(n=100 if fast else 150,
+                               m=330 if fast else 500,
+                               batch=cand_batch,
+                               repeats=10 if fast else 20)
+    print(f"\ncandidate generation (kernel-vs-reference, "
+          f"batch={cand_batch}, 4P):")
+    for r in cand:
+        print(f"  {r['path']:>15}: {r['ms_per_call']:>8.2f} ms/call "
+              f"({r['speedup_vs_loop']:>5.2f}x vs loop) "
+              f"top-k={r['result_keys']}")
+    return rows + sel + cand
 
 
 if __name__ == "__main__":

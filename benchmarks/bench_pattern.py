@@ -2,7 +2,10 @@
 
 Nuri (prioritized groups, anti-monotone pruning, pattern-oriented
 expansion) vs the Arabesque-style threshold baseline at T=µ (oracle
-threshold) and T=µ/3 (realistic mis-set threshold).
+threshold) and T=µ/3 (realistic mis-set threshold); plus the
+kernel-vs-reference mode (:func:`run_kernel_mode`): the same mining run
+with rightmost-path edge probes on the numpy reference path vs the Pallas
+masked-intersection path, result parity asserted (docs/KERNELS.md).
 """
 import time
 
@@ -38,6 +41,25 @@ def run(n=120, m=420, n_labels=4, m_edges_list=(2, 3), seed=0):
     return rows
 
 
+def run_kernel_mode(n=80, m=280, n_labels=4, m_edges=3, k=3, seed=0):
+    """Kernel-vs-reference mode: identical mining runs, edge probes via
+    numpy word-gathers vs the masked-intersection kernel.  Off-TPU the
+    kernel runs in interpreter mode, so its wall-clock is a correctness
+    check, not a perf claim (docs/KERNELS.md)."""
+    g = labeled_graph(n, m, n_labels, seed)
+    t0 = time.time()
+    ref = topk_frequent_patterns(g, m_edges, k=k)
+    t_ref = time.time() - t0
+    t0 = time.time()
+    ker = topk_frequent_patterns(g, m_edges, k=k, use_pallas=True)
+    t_ker = time.time() - t0
+    assert ref.patterns == ker.patterns, "kernel path changed the result"
+    assert ref.candidates == ker.candidates
+    return dict(m_edges=m_edges, candidates=ref.candidates,
+                reference_s=round(t_ref, 3), pallas_s=round(t_ker, 3),
+                parity="ok")
+
+
 def main(fast: bool = False):
     rows = run(n=80 if fast else 120, m=280 if fast else 420,
                m_edges_list=(2,) if fast else (2, 3))
@@ -48,7 +70,12 @@ def main(fast: bool = False):
               f"{r['abq_mu_candidates']:>11} {r['abq_mu3_candidates']:>13} "
               f"{r['nuri_s']:>7.2f} {r['abq_mu_s']:>8.2f} "
               f"{r['abq_mu3_s']:>7.2f}")
-    return rows
+    km = run_kernel_mode(n=60 if fast else 80, m=200 if fast else 280,
+                         m_edges=2 if fast else 3)
+    print(f"\nedge probes (kernel-vs-reference, M={km['m_edges']}): "
+          f"reference {km['reference_s']}s, pallas {km['pallas_s']}s, "
+          f"candidates={km['candidates']}, parity={km['parity']}")
+    return rows + [km]
 
 
 if __name__ == "__main__":

@@ -54,11 +54,17 @@ class TopKPatternMiner:
     """
 
     def __init__(self, g: GraphStore, m_edges: int, k: int = 1,
-                 max_candidates: int = 50_000_000):
+                 max_candidates: int = 50_000_000,
+                 use_pallas: bool = False,
+                 interpret: Optional[bool] = None):
         self.g = g
         self.m_edges = m_edges
         self.k = k
         self.max_candidates = max_candidates
+        # kernel-path knobs for embedding extension (byte-identical results;
+        # DESIGN.md §10) — forwarded to every expand_group call
+        self.use_pallas = use_pallas
+        self.interpret = interpret
         groups = seed_groups(g)
         self.candidates = sum(len(gr.embeddings) for gr in groups.values())
         self._counter = itertools.count()
@@ -95,7 +101,9 @@ class TopKPatternMiner:
         elif thr is not None and sup < thr:
             self.pruned += 1
         else:
-            children, created = expand_group(self.g, gr)
+            children, created = expand_group(
+                self.g, gr, use_pallas=self.use_pallas,
+                interpret=self.interpret)
             self.candidates += created
             self.expanded += 1
             if self.candidates > self.max_candidates:
@@ -120,16 +128,21 @@ class TopKPatternMiner:
 
 
 def topk_frequent_patterns(g: GraphStore, m_edges: int, k: int = 1,
-                           max_candidates: int = 50_000_000) -> MiningResult:
+                           max_candidates: int = 50_000_000,
+                           use_pallas: bool = False,
+                           interpret: Optional[bool] = None) -> MiningResult:
     """Nuri: prioritized + pruned top-k mining of M-edge patterns (Alg. 2)."""
-    miner = TopKPatternMiner(g, m_edges, k, max_candidates)
+    miner = TopKPatternMiner(g, m_edges, k, max_candidates,
+                             use_pallas=use_pallas, interpret=interpret)
     while not miner.done:
         miner.step()
     return miner.result()
 
 
 def arabesque_style_mining(g: GraphStore, m_edges: int, threshold: int,
-                           max_candidates: int = 50_000_000) -> MiningResult:
+                           max_candidates: int = 50_000_000,
+                           use_pallas: bool = False,
+                           interpret: Optional[bool] = None) -> MiningResult:
     """Arabesque-style baseline: level-synchronous frequent-pattern mining
     with a user-supplied threshold ``T`` (paper §6.3).
 
@@ -146,7 +159,8 @@ def arabesque_style_mining(g: GraphStore, m_edges: int, threshold: int,
     for _ in range(m_edges - 1):
         nxt: Dict[Code, PatternGroup] = {}
         for gr in level.values():
-            children, created = expand_group(g, gr)
+            children, created = expand_group(g, gr, use_pallas=use_pallas,
+                                             interpret=interpret)
             candidates += created
             expanded += 1
             if candidates > max_candidates:

@@ -107,6 +107,21 @@ def lt_mask_table(n: int) -> np.ndarray:
     return from_bool(mask)
 
 
+def eye_table(n: int) -> np.ndarray:
+    """Host-side identity table ``eye[v]`` = bitset containing only ``v``,
+    shape [n, W].
+
+    Used as the column operand of the masked-intersection kernel to turn
+    popcounts into membership probes: ``popcount(m & eye[v])`` is bit ``v``
+    of ``m`` (docs/KERNELS.md).
+    """
+    w = num_words(n)
+    out = np.zeros((n, w), np.uint32)
+    v = np.arange(n)
+    out[v, v // WORD_BITS] = np.uint32(1) << (v % WORD_BITS).astype(np.uint32)
+    return out
+
+
 def first_set_bit(bitset: jnp.ndarray) -> jnp.ndarray:
     """Index of the lowest set bit, or -1 if empty.  Batched over leading dims."""
     w = bitset.shape[-1]

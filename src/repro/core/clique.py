@@ -23,6 +23,8 @@ as pure jnp (reference) or via the Pallas kernel
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -33,7 +35,12 @@ from .graph import GraphStore
 
 
 def make_clique_computation(graph: GraphStore,
-                            use_pallas: bool = False) -> SubgraphComputation:
+                            use_pallas: bool = False,
+                            interpret: Optional[bool] = None
+                            ) -> SubgraphComputation:
+    """``use_pallas`` selects the Pallas kernel for child scoring;
+    ``interpret=None`` auto-detects the backend (DESIGN.md §10).  Both
+    paths are byte-identical (tests/test_kernels.py parity suite)."""
     n = graph.n
     w = bitset.num_words(n)
     assert (n + 1) ** 2 < 2 ** 31, "int32 priority keys require N <= ~46k"
@@ -75,7 +82,8 @@ def make_clique_computation(graph: GraphStore,
     def score_children(states):
         _, p_bits, size, _ = _unpack(states)
         if use_pallas:
-            counts = kops.frontier_expand(p_bits, ext_mask)  # [B, N]
+            counts = kops.frontier_expand(p_bits, ext_mask,
+                                          interpret=interpret)  # [B, N]
         else:
             inter = p_bits[:, None, :] & ext_mask[None, :, :]
             counts = bitset.popcount(inter, axis=-1)         # [B, N]

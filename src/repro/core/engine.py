@@ -45,6 +45,16 @@ class EngineConfig:
     max_steps: int = 100_000
     spill: str = "host"           # VPQ backing: "host" | "disk" | "none"
     spill_dir: Optional[str] = None
+    # kernel-path knobs (DESIGN.md §10): a declarative record consumed at
+    # computation-construction time (service.api.compile_request reads
+    # them when calling make_*_computation) — NOT by the engine loop,
+    # which is kernel-agnostic.  Setting them here does not retrofit a
+    # computation you already built; direct Engine callers must pass the
+    # knobs to make_*_computation themselves.  Both settings leave results
+    # byte-identical (parity-tested), so they are also excluded from the
+    # service result-cache key.
+    use_pallas: bool = False      # score via the Pallas masked-intersection
+    interpret: Optional[bool] = None  # None = auto-detect backend
 
 
 @dataclasses.dataclass

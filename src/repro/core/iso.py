@@ -23,7 +23,7 @@ with the k-th result score.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -116,7 +116,27 @@ def make_iso_computation(graph: GraphStore,
                          q_edges: Sequence[Tuple[int, int]],
                          q_labels: Sequence[int],
                          index: np.ndarray,
-                         induced: bool = True) -> SubgraphComputation:
+                         induced: bool = True,
+                         use_pallas: bool = False,
+                         interpret: Optional[bool] = None,
+                         cand_path: str = "batched") -> SubgraphComputation:
+    """Build the iso :class:`SubgraphComputation`.
+
+    Candidate-generation path (byte-identical results, DESIGN.md §10):
+
+    * ``use_pallas=True`` — batched constraint product, then the
+      masked-intersection Pallas kernel materializes the [B, N] candidate
+      grid for the whole dequeued batch in one call (``interpret=None``
+      auto-detects the backend; ``cand_path`` is ignored);
+    * ``cand_path="batched"`` (default) — same batched constraint
+      product, jnp membership unpack (the kernel's reference path);
+    * ``cand_path="vmap"`` — the legacy per-state ``fori_loop`` under
+      ``vmap``;
+    * ``cand_path="map"`` — the per-state loop run truly one state at a
+      time (``lax.map``), the paper's Algorithm-1 form and the baseline
+      ``benchmarks/bench_iso.py`` measures the batched paths against.
+    """
+    assert cand_path in ("batched", "vmap", "map"), cand_path
     assert graph.labels is not None
     n = graph.n
     nq = len(q_labels)
@@ -147,13 +167,52 @@ def make_iso_computation(graph: GraphStore,
     ub_rest_d = jnp.asarray(ub_rest, jnp.int32)
     q_adj_d = jnp.asarray(q_adj_o)
     q_labels_d = jnp.asarray(q_labels_o)
+    eye_bits = jnp.asarray(bitset.eye_table(n))
+    if use_pallas:
+        from repro.kernels import ops as kops
 
     max_deg = int(graph.degrees.max())
     base = int(2 * nq * max_deg + max_deg + 2)     # lexicographic stride
     assert (nq + 1) * base < 2 ** 31
 
+    full_word = jnp.uint32(0xFFFFFFFF)
+
+    def _cand_parts(states):
+        """Batched candidate generation for a whole dequeued batch: per-row
+        label bitsets and constraint masks (adjacency/complement products
+        ∧ ~used), one gather + AND-reduce instead of a per-state loop.
+
+        The candidate set of state ``b`` is ``lbl[b] & mask[b]``; the two
+        parts are returned separately because they are exactly the
+        (rows, row-mask) operands of the masked-intersection kernel.
+
+        The constraint-slot loop is statically unrolled over ``nq`` with
+        [B, W]-shaped operations only — no sequential ``fori_loop`` carry
+        and no [B, nq, W] temporaries, which is what makes this path
+        faster than the per-state loop (benchmarks/bench_iso.py).
+        """
+        b = states.shape[0]
+        mapping = states[:, :nq]                        # [B, nq]
+        d = states[:, nq]                               # [B]
+        j = jnp.minimum(d, nq - 1)
+        lbl = label_bits[q_labels_d[j]]                 # [B, W]
+        mask = jnp.full((b, w), full_word)
+        used = jnp.zeros((b, w), jnp.uint32)
+        for i in range(nq):                             # static: nq small
+            mi = jnp.maximum(mapping[:, i], 0)          # [B]
+            row = adj_bits[mi]                          # [B, W]
+            need = q_adj_d[i][j]                        # [B] (q_adj symmetric)
+            con = jnp.where(need[:, None], row, ~row) if induced else \
+                jnp.where(need[:, None], row, full_word)
+            active = (i < d)[:, None]                   # [B, 1]
+            mask = jnp.where(active, mask & con, mask)
+            used = jnp.where(active, used | eye_bits[mi], used)
+        mask = mask & ~used
+        return lbl, jnp.where((d < nq)[:, None], mask, jnp.uint32(0))
+
     def _cand_bits(state):
-        """Bitset of valid data vertices for the next query vertex."""
+        """Per-state loop form of :func:`_cand_parts` (legacy reference,
+        kept for the `cand_path="vmap"/"map"` benchmark baselines)."""
         mapping = state[:nq]
         d = state[nq]
         j = jnp.minimum(d, nq - 1)
@@ -191,8 +250,19 @@ def make_iso_computation(graph: GraphStore,
                 jnp.asarray(ub, jnp.int32))
 
     def score_children(states):
-        cand = jax.vmap(_cand_bits)(states)                  # [B, W]
-        in_cand = bitset.to_bool(cand, n)                    # [B, N]
+        if use_pallas:
+            lbl, mask = _cand_parts(states)
+            in_cand = kops.masked_intersect(
+                lbl, eye_bits, mask, interpret=interpret) > 0    # [B, N]
+        elif cand_path == "batched":
+            lbl, mask = _cand_parts(states)
+            in_cand = bitset.to_bool(lbl & mask, n)              # [B, N]
+        elif cand_path == "vmap":
+            cand = jax.vmap(_cand_bits)(states)                  # [B, W]
+            in_cand = bitset.to_bool(cand, n)                    # [B, N]
+        else:  # "map": one state at a time (the pre-batching loop form)
+            cand = jax.lax.map(_cand_bits, states)               # [B, W]
+            in_cand = bitset.to_bool(cand, n)                    # [B, N]
         d = states[:, nq]
         score = states[:, nq + 1]
         seed = jnp.maximum(states[:, 0], 0)

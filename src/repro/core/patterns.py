@@ -9,7 +9,11 @@ yields Property 1 of the paper: all embeddings of a child pattern come from
 exactly one parent group.
 
 Embedding extension is numpy-vectorized CSR gathering (no per-embedding
-Python loops); edge-existence checks use the packed bitset adjacency.
+Python loops); edge-existence checks use the packed bitset adjacency —
+all rightmost-path backward probes of a group go through **one** batched
+probe call, which runs either as numpy word-gathers (reference) or as the
+masked-intersection Pallas kernel with one-hot row masks
+(``use_pallas=True``, DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -17,7 +21,9 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+import jax.numpy as jnp
 
+from . import bitset
 from .graph import GraphStore
 
 Code = Tuple[Tuple[int, int, int, int], ...]   # ((i, j, li, lj), ...)
@@ -182,6 +188,51 @@ def _has_edge_vec(g: GraphStore, u: np.ndarray, v: np.ndarray) -> np.ndarray:
     return (word >> (v % 32).astype(np.uint32)) & 1 > 0
 
 
+# per-graph device bitsets for the kernel probe path, keyed by content
+# fingerprint so repeated expand_group calls don't re-upload adjacency
+_DEVICE_BITS_CACHE: Dict[str, tuple] = {}
+_DEVICE_BITS_CAPACITY = 8
+
+
+def _device_bits(g: GraphStore) -> tuple:
+    key = g.fingerprint
+    ent = _DEVICE_BITS_CACHE.pop(key, None)     # LRU: re-insert on hit
+    if ent is None:
+        w = bitset.num_words(g.n)
+        ent = (jnp.asarray(g.adj_bits), jnp.asarray(bitset.eye_table(g.n)),
+               jnp.full((1, w), 0xFFFFFFFF, jnp.uint32))
+        while len(_DEVICE_BITS_CACHE) >= _DEVICE_BITS_CAPACITY:
+            _DEVICE_BITS_CACHE.pop(next(iter(_DEVICE_BITS_CACHE)))
+    _DEVICE_BITS_CACHE[key] = ent
+    return ent
+
+
+def _edge_probe(g: GraphStore, u: np.ndarray, v: np.ndarray,
+                use_pallas: bool = False,
+                interpret: Optional[bool] = None) -> np.ndarray:
+    """Batched edge-existence probe: ``out[e] = (u[e], v[e]) in E``.
+
+    Reference path: numpy word-gather into the packed adjacency.  Kernel
+    path: ``popcount(adj[u] & eye[v] & ones)`` via the masked-intersection
+    kernel (rows = adjacency rows, row mask = one-hot target bitsets,
+    single all-ones column).  Rows are padded to the next power of two so
+    ragged embedding batches reuse a handful of kernel traces.
+    """
+    if not use_pallas or len(u) == 0:
+        return _has_edge_vec(g, u, v)
+    from repro.kernels import ops as kops
+    adj_d, eye_d, ones = _device_bits(g)
+    e = len(u)
+    ep = 1 << max(3, (e - 1).bit_length())
+    up = np.zeros(ep, np.int64)
+    vp = np.zeros(ep, np.int64)
+    up[:e], vp[:e] = u, v
+    counts = kops.masked_intersect(adj_d[jnp.asarray(up)], ones,
+                                   eye_d[jnp.asarray(vp)],
+                                   interpret=interpret)
+    return np.asarray(counts[:e, 0]) > 0
+
+
 def _gather_neighbors(g: GraphStore, vs: np.ndarray):
     """All (row, neighbor) pairs for sources ``vs`` — fully vectorized CSR."""
     counts = g.degrees[vs].astype(np.int64)
@@ -213,10 +264,16 @@ def seed_groups(g: GraphStore) -> Dict[Code, PatternGroup]:
     return groups
 
 
-def expand_group(g: GraphStore, group: PatternGroup
+def expand_group(g: GraphStore, group: PatternGroup,
+                 use_pallas: bool = False,
+                 interpret: Optional[bool] = None
                  ) -> Tuple[Dict[Code, PatternGroup], int]:
     """Pattern-oriented expansion: extend every embedding by one
     rightmost-path edge; child groups keyed by (minimal) code.
+
+    ``use_pallas`` routes the rightmost-path edge-existence checks through
+    the masked-intersection kernel (:func:`_edge_probe`); results are
+    byte-identical to the numpy reference path.
 
     Returns (children, candidates_created) — the latter is the paper's cost
     metric (embeddings materialized, pre minimality filtering).
@@ -243,13 +300,19 @@ def expand_group(g: GraphStore, group: PatternGroup
         else:
             children[child_code] = PatternGroup(child_code, child_emb)
 
-    # --- backward extensions: rightmost vertex -> earlier rmpath vertex
-    for j in rmpath[:-1]:
-        if j in p_adj[right]:
-            continue                       # edge already in the pattern
-        mask = _has_edge_vec(g, emb[:, right], emb[:, j])
-        child_code = tuple(code) + ((right, j, vlabels[right], vlabels[j]),)
-        _add(child_code, emb[mask])
+    # --- backward extensions: rightmost vertex -> earlier rmpath vertex.
+    # All candidate targets share one batched probe call (E × |targets|
+    # pairs) instead of one call per rightmost-path vertex.
+    back_js = [j for j in rmpath[:-1] if j not in p_adj[right]]
+    if back_js and len(emb):
+        hits = _edge_probe(
+            g, np.tile(emb[:, right], len(back_js)),
+            np.concatenate([emb[:, j] for j in back_js]),
+            use_pallas, interpret).reshape(len(back_js), len(emb))
+        for row, j in enumerate(back_js):
+            child_code = tuple(code) + \
+                ((right, j, vlabels[right], vlabels[j]),)
+            _add(child_code, emb[hits[row]])
 
     # --- forward extensions from every rightmost-path vertex
     for i in rmpath:

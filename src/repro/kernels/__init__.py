@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the discovery engine and co-workloads.
+#
+# Layout (docs/KERNELS.md, DESIGN.md §10): <name>.py holds one kernel,
+# ref.py holds its pure-jnp oracle (<name>_ref, identical semantics),
+# ops.py is the public wrapper layer with backend auto-detection
+# (runtime.py), and tests/test_kernels.py sweeps shapes against the
+# oracles in interpret mode.  Add kernels ONLY for compute hot-spots the
+# paper itself optimizes; the discovery hot loop is masked_intersect.py
+# (frontier_expand.py is its mask-free clique specialization).

@@ -1,69 +1,38 @@
 """Pallas TPU kernel: batched clique-frontier expansion (the paper's hot
-loop, DESIGN.md §2).
+loop, DESIGN.md §2.1).
 
 For B dequeued cliques with candidate bitsets ``P [B, W]`` (uint32 words)
 and the precomputed per-vertex extension masks ``ext = N(v) ∩ {u > v}``
 packed as ``[N, W]``, computes ``counts[b, v] = popcount(P[b] & ext[v])`` —
 the |P| of every possible child clique, feeding priority and the CP bound.
 
-TPU mapping: this is a bitwise-AND/popcount "matmul" over the word axis —
-pure VPU work.  The grid tiles (B, N); each step holds a ``[bB, W]`` P tile
-and a ``[bN, W]`` ext tile in VMEM and materializes only the
-``[bB, bN, W]`` intersection tile (vs. the full ``[B, N, W]`` the jnp
-reference allocates — the VMEM working-set win that makes expansion
-HBM-bandwidth bound instead of capacity bound).
+Since the masked-intersection generalization (DESIGN.md §10) this is the
+mask-free specialization of :mod:`repro.kernels.masked_intersect`, kept as
+a named entry point because it *is* the paper's clique kernel; the tiling
+argument ([bB, W] × [bN, W] VMEM working set instead of the reference's
+full [B, N, W] intersection) lives there and in docs/KERNELS.md.
+
+``interpret=None`` auto-detects the backend: real lowering on TPU,
+interpreter mode elsewhere (the old hardcoded ``interpret=True`` silently
+ran the interpreter on TPU).
 """
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from .masked_intersect import (DEFAULT_BLOCK_B, DEFAULT_BLOCK_N,
+                               masked_intersect)
+
+__all__ = ["frontier_expand", "DEFAULT_BLOCK_B", "DEFAULT_BLOCK_N"]
 
 
-DEFAULT_BLOCK_B = 8
-DEFAULT_BLOCK_N = 128
-
-
-def _kernel(p_ref, ext_ref, out_ref):
-    p = p_ref[...]                       # [bB, W] uint32
-    ext = ext_ref[...]                   # [bN, W] uint32
-    inter = p[:, None, :] & ext[None, :, :]
-    counts = jnp.sum(jax.lax.population_count(inter).astype(jnp.int32),
-                     axis=-1)
-    out_ref[...] = counts                # [bB, bN]
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("block_b", "block_n", "interpret"))
 def frontier_expand(p_bits: jnp.ndarray, ext_bits: jnp.ndarray,
                     block_b: int = DEFAULT_BLOCK_B,
                     block_n: int = DEFAULT_BLOCK_N,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """counts[b, v] = popcount(p_bits[b] & ext_bits[v]); int32 [B, N]."""
-    b, w = p_bits.shape
-    n, w2 = ext_bits.shape
-    assert w == w2
-    bb = min(block_b, b)
-    bn = min(block_n, n)
-    pad_b = (-b) % bb
-    pad_n = (-n) % bn
-    if pad_b:
-        p_bits = jnp.pad(p_bits, ((0, pad_b), (0, 0)))
-    if pad_n:
-        ext_bits = jnp.pad(ext_bits, ((0, pad_n), (0, 0)))
-    bp, np_ = b + pad_b, n + pad_n
-
-    out = pl.pallas_call(
-        _kernel,
-        grid=(bp // bb, np_ // bn),
-        in_specs=[
-            pl.BlockSpec((bb, w), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, w), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.int32),
-        interpret=interpret,
-    )(p_bits, ext_bits)
-    return out[:b, :n]
+    return masked_intersect(p_bits, ext_bits, None,
+                            block_b=block_b, block_n=block_n,
+                            interpret=interpret)

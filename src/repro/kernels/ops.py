@@ -1,29 +1,27 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-On this CPU container kernels run under ``interpret=True`` (Pallas executes
-the kernel body in Python per grid step — bitwise-identical semantics);
-on TPU set ``REPRO_PALLAS_COMPILE=1`` to lower them for real.
+Execution mode is auto-detected per kernel call (``interpret=None`` →
+:func:`repro.kernels.runtime.default_interpret`): kernels lower for real
+on TPU and run under the Pallas interpreter elsewhere (bitwise-identical
+semantics, CPU CI).  Set ``REPRO_PALLAS_COMPILE=1`` to force real
+lowering regardless of backend; pass ``interpret=...`` explicitly to pin
+one call.
 """
 from __future__ import annotations
-
-import os
-
-import jax
 
 from .embedding_bag import embedding_bag as _embedding_bag
 from .flash_attention import flash_attention as _flash_attention
 from .frontier_expand import frontier_expand as _frontier_expand
+from .masked_intersect import masked_intersect as _masked_intersect
+from .runtime import default_interpret as _interpret
 from .segment_matmul import segment_matmul as _segment_matmul
 
 
-def _interpret() -> bool:
-    if os.environ.get("REPRO_PALLAS_COMPILE") == "1":
-        return False
-    return jax.default_backend() != "tpu"
+def masked_intersect(a_bits, b_bits, mask_bits=None, **kw):
+    return _masked_intersect(a_bits, b_bits, mask_bits, **kw)
 
 
 def frontier_expand(p_bits, ext_bits, **kw):
-    kw.setdefault("interpret", _interpret())
     return _frontier_expand(p_bits, ext_bits, **kw)
 
 

@@ -10,6 +10,21 @@ import jax
 import jax.numpy as jnp
 
 
+def masked_intersect_ref(a_bits: jnp.ndarray, b_bits: jnp.ndarray,
+                         mask_bits=None):
+    """counts[r, c] = popcount(a[r] & mask[r] & b[c]).
+
+    a_bits/mask_bits: [B, W] uint32 rows (mask None = all-ones);
+    b_bits: [N, W] uint32 columns.  Returns [B, N] int32.  Materializes
+    the full [B, N, W] intersection — the capacity-bound allocation the
+    Pallas tiling avoids (docs/KERNELS.md).
+    """
+    rows = a_bits if mask_bits is None else a_bits & mask_bits
+    inter = rows[:, None, :] & b_bits[None, :, :]
+    return jnp.sum(jax.lax.population_count(inter).astype(jnp.int32),
+                   axis=-1)
+
+
 def frontier_expand_ref(p_bits: jnp.ndarray, ext_bits: jnp.ndarray):
     """counts[b, v] = popcount(p_bits[b] & ext_bits[v]).
 

@@ -1,0 +1,33 @@
+"""Pallas execution-mode selection shared by every kernel wrapper
+(docs/KERNELS.md, DESIGN.md §10).
+
+Every kernel in this package takes ``interpret: Optional[bool]`` with a
+``None`` default meaning *auto-detect*: lower for real on TPU, run the
+Pallas interpreter everywhere else (CPU CI, laptops).  The old behavior —
+a hardcoded ``interpret=True`` — silently ran the interpreter on TPU
+unless the caller remembered to flip it; auto-detection makes the fast
+path the default on the hardware that has one while keeping CPU tests
+hermetic.
+
+``REPRO_PALLAS_COMPILE=1`` forces real lowering regardless of backend
+(useful for Pallas-on-CPU lowering experiments and for asserting that a
+TPU job is *not* in interpreter mode).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True iff Pallas kernels should run in interpreter mode here."""
+    if os.environ.get("REPRO_PALLAS_COMPILE") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve a kernel's ``interpret`` argument (None = auto-detect)."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -78,7 +78,10 @@ class DiscoveryRequest:
     induced: bool = True                                   # iso semantics
     max_hops: int = 2                                      # iso index depth
     m_edges: Optional[int] = None                          # pattern size
-    use_pallas: bool = False                               # clique kernel
+    # kernel-path knobs (all workloads; byte-identical results, so both
+    # are excluded from the result-cache key — DESIGN.md §10)
+    use_pallas: bool = False          # Pallas masked-intersection path
+    interpret: Optional[bool] = None  # None = auto-detect backend
     # service knobs
     use_cache: bool = True
     request_id: Optional[str] = None
@@ -96,7 +99,7 @@ class DiscoveryRequest:
                       "candidate_budget", "max_hops", "m_edges"):
                 if d.get(f) is not None:
                     d[f] = int(d[f])
-            for f in ("induced", "use_pallas", "use_cache"):
+            for f in ("induced", "use_pallas", "use_cache", "interpret"):
                 if d.get(f) is not None:
                     d[f] = bool(d[f])
             if d.get("weights") is not None:
@@ -132,6 +135,14 @@ class DiscoveryRequest:
         g = registry.get(self.graph)
 
         if self.workload == "weighted-clique":
+            if self.use_pallas:
+                # the weighted CP bound is a *weighted* popcount, which the
+                # masked-intersection kernel does not compute — reject
+                # explicitly rather than silently running the reference path
+                raise ValidationError(
+                    "use_pallas is not supported for weighted-clique "
+                    "(needs a weighted-popcount kernel variant; "
+                    "DESIGN.md §10)")
             if self.weights is None:
                 raise ValidationError("weighted-clique requires `weights`")
             if len(self.weights) != g.n:
@@ -173,9 +184,12 @@ class DiscoveryRequest:
         """Canonical, JSON-stable dict of everything that determines the
         *result* of this request — the cache-key payload.
 
-        Excludes ``use_cache`` and ``request_id`` (service plumbing).  Query
-        edges are normalized to sorted ``(min, max)`` pairs so isomorphic
-        edge orderings of the same query graph key identically.
+        Excludes ``use_cache`` and ``request_id`` (service plumbing) and the
+        kernel-path knobs ``use_pallas`` / ``interpret`` (parity-tested to
+        leave results byte-identical, so kernel- and reference-path runs of
+        the same query share one cache entry).  Query edges are normalized
+        to sorted ``(min, max)`` pairs so isomorphic edge orderings of the
+        same query graph key identically.
         """
         spec: Dict[str, Any] = dict(
             workload=self.workload, k=self.k, batch=self.batch,
@@ -255,9 +269,18 @@ def compile_request(req: DiscoveryRequest, registry: GraphRegistry,
     if req.workload == "pattern":
         return CompiledQuery(request=req, graph=g, kind="aggregate")
 
+    # EngineConfig is the single carrier of the kernel-path knobs: the
+    # computation constructors below read them from here, so engine-driven
+    # callers (service, benchmarks) select the kernel path per request
+    cfg = EngineConfig(k=req.k, batch=req.batch,
+                       pool_capacity=req.pool_capacity,
+                       max_steps=req.step_budget,
+                       use_pallas=req.use_pallas, interpret=req.interpret)
+
     if req.workload == "clique":
         from repro.core.clique import make_clique_computation
-        comp = make_clique_computation(g, use_pallas=req.use_pallas)
+        comp = make_clique_computation(g, use_pallas=cfg.use_pallas,
+                                       interpret=cfg.interpret)
     elif req.workload == "weighted-clique":
         from repro.core.weighted_clique import make_weighted_clique_computation
         comp = make_weighted_clique_computation(
@@ -266,10 +289,8 @@ def compile_request(req: DiscoveryRequest, registry: GraphRegistry,
         from repro.core.iso import make_iso_computation
         comp = make_iso_computation(
             g, list(req.q_edges), list(req.q_labels),
-            _iso_index(g, req.max_hops), induced=req.induced)
+            _iso_index(g, req.max_hops), induced=req.induced,
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret)
 
-    cfg = EngineConfig(k=req.k, batch=req.batch,
-                       pool_capacity=req.pool_capacity,
-                       max_steps=req.step_budget)
     return CompiledQuery(request=req, graph=g, kind="engine",
                          comp=comp, engine_cfg=cfg)

@@ -110,7 +110,9 @@ class PatternQueryTask:
         # the miner keeps its library-default runaway cap; the service
         # budget is enforced here, between steps, with the same inclusive
         # (>=) semantics as EngineQueryTask for every workload
-        self.miner = TopKPatternMiner(graph, req.m_edges, req.k)
+        self.miner = TopKPatternMiner(graph, req.m_edges, req.k,
+                                      use_pallas=req.use_pallas,
+                                      interpret=req.interpret)
         self.terminated: Optional[str] = (
             "complete" if self.miner.done else None)
         self._payload: Optional[dict] = None
@@ -269,12 +271,14 @@ class DiscoveryService:
             return PatternQueryTask(req, graph)
         # the engine key covers only what shapes the compiled step: budgets
         # are enforced per-task (so they're dropped from the spec), while
-        # use_pallas changes the kernel without changing results (so it's
-        # added back — it is deliberately absent from the result-cache key)
+        # use_pallas/interpret change the kernel path without changing
+        # results (so they're added back — both are deliberately absent
+        # from the result-cache key)
         engine_spec = req.canonical_spec()
         engine_spec.pop("step_budget", None)
         engine_spec.pop("candidate_budget", None)
         engine_spec["use_pallas"] = req.use_pallas
+        engine_spec["interpret"] = req.interpret
         engine_key = make_cache_key(graph.fingerprint, engine_spec)
         engine = self._engines.get(engine_key)
         if engine is None:

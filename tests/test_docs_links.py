@@ -1,0 +1,35 @@
+"""Intra-repo markdown links must resolve (run by the CI docs job).
+
+Scans every root-level ``*.md`` plus ``docs/*.md`` for inline links and
+asserts that each relative target exists on disk, so DESIGN.md/README.md/
+docs cross-references can't rot silently when files move.
+"""
+import pathlib
+import re
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOCS = sorted(REPO.glob("*.md")) + sorted((REPO / "docs").glob("*.md"))
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _relative_targets(md: pathlib.Path):
+    for target in LINK.findall(md.read_text()):
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        yield target.split("#", 1)[0]
+
+
+@pytest.mark.parametrize("md", DOCS, ids=lambda p: str(p.relative_to(REPO)))
+def test_markdown_links_resolve(md):
+    broken = [t for t in _relative_targets(md)
+              if not (md.parent / t).exists()]
+    assert not broken, f"{md.relative_to(REPO)}: broken links {broken}"
+
+
+def test_docs_corpus_found():
+    names = {p.name for p in DOCS}
+    assert {"README.md", "DESIGN.md"} <= names
+    assert any(p.parent.name == "docs" for p in DOCS), "docs/*.md missing"

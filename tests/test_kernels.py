@@ -1,10 +1,11 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.core import bitset
+from repro.kernels import ops, ref, runtime
 
 
 @pytest.mark.parametrize("b,n,w", [(1, 16, 1), (13, 100, 7), (32, 257, 4),
@@ -17,6 +18,139 @@ def test_frontier_expand(b, n, w, block_b, block_n):
     out = ops.frontier_expand(p, ext, block_b=block_b, block_n=block_n)
     want = ref.frontier_expand_ref(p, ext)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ---------------------------------------------- masked-intersection kernel
+# ragged on purpose: W=1, B/N not multiples of any block size
+@pytest.mark.parametrize("b,n,w", [(1, 16, 1), (5, 257, 1), (13, 100, 7),
+                                   (32, 300, 4), (7, 1, 2)])
+@pytest.mark.parametrize("block_b,block_n", [(8, 128), (3, 37)])
+@pytest.mark.parametrize("with_mask", [False, True])
+def test_masked_intersect_matches_reference(b, n, w, block_b, block_n,
+                                            with_mask):
+    rng = np.random.default_rng(b * n * w + block_b)
+    a = jnp.asarray(rng.integers(0, 2 ** 32, (b, w), dtype=np.uint32))
+    cols = jnp.asarray(rng.integers(0, 2 ** 32, (n, w), dtype=np.uint32))
+    mask = jnp.asarray(
+        rng.integers(0, 2 ** 32, (b, w), dtype=np.uint32)) if with_mask \
+        else None
+    out = ops.masked_intersect(a, cols, mask, block_b=block_b,
+                               block_n=block_n)
+    want = ref.masked_intersect_ref(a, cols, mask)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_masked_intersect_membership_via_eye_table():
+    """With one-hot columns the kernel is a batched membership probe:
+    counts[r, v] = bit v of (a & mask)[r] (the iso candidate-grid case)."""
+    rng = np.random.default_rng(7)
+    n = 100
+    a = jnp.asarray(rng.integers(0, 2 ** 32, (9, 4), dtype=np.uint32))
+    mask = jnp.asarray(rng.integers(0, 2 ** 32, (9, 4), dtype=np.uint32))
+    eye = jnp.asarray(bitset.eye_table(n))
+    member = ops.masked_intersect(a, eye, mask) > 0
+    want = np.asarray(bitset.to_bool(a & mask, n))
+    np.testing.assert_array_equal(np.asarray(member), want)
+
+
+def test_frontier_expand_is_maskless_specialization():
+    rng = np.random.default_rng(11)
+    p = jnp.asarray(rng.integers(0, 2 ** 32, (6, 3), dtype=np.uint32))
+    ext = jnp.asarray(rng.integers(0, 2 ** 32, (40, 3), dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.frontier_expand(p, ext)),
+        np.asarray(ops.masked_intersect(p, ext)))
+
+
+# ------------------------------------------------ interpret auto-detection
+def test_interpret_autodetect(monkeypatch):
+    """interpret=None must lower for real on TPU and interpret elsewhere;
+    REPRO_PALLAS_COMPILE=1 forces real lowering (the old hardcoded
+    interpret=True silently interpreted on TPU)."""
+    monkeypatch.delenv("REPRO_PALLAS_COMPILE", raising=False)
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert runtime.default_interpret() is True
+    assert runtime.resolve_interpret(None) is True
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert runtime.default_interpret() is False
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    monkeypatch.setenv("REPRO_PALLAS_COMPILE", "1")
+    assert runtime.default_interpret() is False
+    # explicit values always win over detection
+    assert runtime.resolve_interpret(True) is True
+    assert runtime.resolve_interpret(False) is False
+
+
+@pytest.mark.parametrize("interpret", [True, False])
+def test_masked_intersect_both_execution_paths(interpret):
+    """Parity in both execution modes; the compiled path runs on TPU only
+    (skipped elsewhere — CPU has no Pallas TPU lowering)."""
+    if not interpret and jax.default_backend() != "tpu":
+        pytest.skip("compiled Pallas path requires a TPU backend")
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(0, 2 ** 32, (13, 4), dtype=np.uint32))
+    cols = jnp.asarray(rng.integers(0, 2 ** 32, (130, 4), dtype=np.uint32))
+    mask = jnp.asarray(rng.integers(0, 2 ** 32, (13, 4), dtype=np.uint32))
+    out = ops.masked_intersect(a, cols, mask, interpret=interpret)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.masked_intersect_ref(a, cols, mask)))
+
+
+# ------------------------------------------- workload kernel-path parity
+def _iso_run(g, index, use_pallas, cand_path="batched"):
+    from repro.core.engine import Engine, EngineConfig
+    from repro.core.iso import make_iso_computation
+    comp = make_iso_computation(
+        g, [(0, 1), (1, 2), (2, 3)], [0, 1, 0, 2], index,
+        use_pallas=use_pallas, cand_path=cand_path)
+    res = Engine(comp, EngineConfig(k=3, batch=32, pool_capacity=4096,
+                                    max_steps=20000)).run()
+    return (np.asarray(res.result_keys).tolist(),
+            np.asarray(res.result_states).tolist(), res.candidates)
+
+
+def test_iso_topk_identical_with_and_without_kernel():
+    """Byte-identical top-k (keys AND states) across the per-state loop,
+    batched-jnp, and Pallas candidate-generation paths."""
+    from repro.core.iso import build_iso_index
+    from repro.data.synthetic_graphs import labeled_graph
+    g = labeled_graph(n=90, m=300, n_labels=3, seed=4)
+    index = build_iso_index(g, max_hops=3)
+    per_state = _iso_run(g, index, use_pallas=False, cand_path="map")
+    vmapped = _iso_run(g, index, use_pallas=False, cand_path="vmap")
+    batched = _iso_run(g, index, use_pallas=False)
+    kernel = _iso_run(g, index, use_pallas=True)
+    assert per_state == vmapped == batched == kernel
+
+
+def test_weighted_clique_rejects_kernel_path():
+    """weighted-clique needs a weighted-popcount kernel variant, so
+    use_pallas must be rejected at validation, not silently ignored."""
+    from repro.data.synthetic_graphs import planted_clique_graph
+    from repro.service.api import (DiscoveryRequest, GraphRegistry,
+                                   ValidationError)
+    reg = GraphRegistry()
+    reg.register("g", planted_clique_graph(30, 100, 5, seed=0))
+    req = DiscoveryRequest(graph="g", workload="weighted-clique",
+                           weights=tuple([1] * 30), use_pallas=True)
+    with pytest.raises(ValidationError, match="weighted-clique"):
+        req.validate(reg)
+    # and without the knob it still validates fine
+    DiscoveryRequest(graph="g", workload="weighted-clique",
+                     weights=tuple([1] * 30)).validate(reg)
+
+
+def test_pattern_topk_identical_with_and_without_kernel():
+    """Mining with kernel edge probes returns the identical pattern list,
+    supports, and candidate count as the numpy reference path."""
+    from repro.core.aggregate import topk_frequent_patterns
+    from repro.data.synthetic_graphs import labeled_graph
+    g = labeled_graph(n=60, m=180, n_labels=3, seed=9)
+    a = topk_frequent_patterns(g, m_edges=3, k=3)
+    b = topk_frequent_patterns(g, m_edges=3, k=3, use_pallas=True)
+    assert a.patterns == b.patterns
+    assert (a.candidates, a.groups_expanded, a.groups_pruned) == \
+        (b.candidates, b.groups_expanded, b.groups_pruned)
 
 
 @pytest.mark.parametrize("e,n,d", [(64, 16, 8), (300, 50, 16), (1024, 128, 64)])
