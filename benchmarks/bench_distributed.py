@@ -1,0 +1,157 @@
+"""Sharded-engine benchmark: 1 vs N forced host devices (DESIGN.md §11).
+
+Runs the same clique workload on the single-device engine and on the
+sharded engine at increasing shard counts, asserting byte-identical top-k
+results at every width, then reports wall-clock speedup plus per-shard
+spill / refill / rebalance stats from a skewed workload that forces the
+host-side rebalancer to move work.
+
+Device sharding must be configured before JAX initializes, so the harness
+entry (:func:`main`) re-executes this file in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``; running the file
+directly sets the flag itself:
+
+    PYTHONPATH=src python benchmarks/bench_distributed.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_DEVICES = 8
+_JSON_MARK = "BENCH-DISTRIBUTED-JSON:"
+
+
+def _bench(fast: bool) -> dict:
+    # deferred imports: JAX must initialize after XLA_FLAGS is set
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core.clique import make_clique_computation
+    from repro.core.engine import Engine, EngineConfig
+    from repro.core.graph import GraphStore
+    from repro.data.synthetic_graphs import (densifying_graph,
+                                             planted_clique_graph)
+    from repro.distributed import ShardedEngine
+
+    def best_of(runs, fn):
+        best, out = None, None
+        for _ in range(runs):
+            t0 = time.perf_counter()
+            out = fn()
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        return best, out
+
+    n, m = (150, 900) if fast else (300, 2400)
+    g = planted_clique_graph(n=n, m=m, clique_size=8, seed=7)
+    comp = make_clique_computation(g)
+    cfg = EngineConfig(k=4, batch=32, pool_capacity=1024, max_steps=200_000)
+
+    seq_s, ref = best_of(2, Engine(comp, cfg).run)
+    rows = []
+    for shards in (1, 2, _DEVICES):
+        eng = ShardedEngine(comp, dataclasses.replace(cfg, shards=shards))
+        wall_s, res = best_of(2, eng.run)
+        assert np.array_equal(ref.result_keys, res.result_keys), \
+            f"shards={shards}: result keys diverged"
+        assert np.array_equal(ref.result_states, res.result_states), \
+            f"shards={shards}: result states diverged"
+        rows.append(dict(
+            shards=shards, wall_s=round(wall_s, 3),
+            speedup=round(seq_s / wall_s, 2), steps=res.steps,
+            candidates=res.candidates, pruned=res.pruned,
+            spilled=res.spilled, refilled=res.refilled,
+            rebalanced=res.rebalanced))
+
+    print(f"[bench_distributed] clique n={n} m={m} k={cfg.k} "
+          f"(parity vs single-device Engine asserted at every width)")
+    print("  note: forced host devices share one CPU, so wall-clock here "
+          "validates plumbing, not hardware speedup (see DESIGN.md §11)")
+    print(f"  single-device Engine.run : {seq_s:.3f}s")
+    print(f"  {'shards':>6} {'wall s':>8} {'speedup':>8} {'steps':>6} "
+          f"{'cand':>8} {'spill':>7} {'refill':>7} {'rebal':>6}")
+    for r in rows:
+        print(f"  {r['shards']:>6} {r['wall_s']:>8.3f} {r['speedup']:>8.2f} "
+              f"{r['steps']:>6} {r['candidates']:>8} {r['spilled']:>7} "
+              f"{r['refilled']:>7} {r['rebalanced']:>6}")
+
+    # --- skewed workload: hot subtree on one shard, tiny pools -> spill,
+    # idle siblings -> the rebalancer must redistribute spilled work
+    ns = 96 if fast else 192
+    gs = densifying_graph(ns, 5 * ns, seed=3)
+    members = np.arange(0, 24, 2)    # clique on even ids = shard 0 of 2
+    extra = [(int(u), int(v)) for i, u in enumerate(members)
+             for v in members[i + 1:]]
+    gs = GraphStore.from_edges(
+        ns, np.concatenate([gs.edge_array, np.array(extra, np.int64)]))
+    scomp = make_clique_computation(gs)
+    scfg = EngineConfig(k=3, batch=8, pool_capacity=64, max_steps=200_000)
+    sref = Engine(scomp, scfg).run()
+    sres = ShardedEngine(
+        scomp, dataclasses.replace(scfg, shards=2)).run()
+    assert np.array_equal(sref.result_keys, sres.result_keys)
+    assert np.array_equal(sref.result_states, sres.result_states)
+    skew = dict(n=ns, shards=2, spilled=sres.spilled,
+                refilled=sres.refilled, rebalanced=sres.rebalanced,
+                per_shard=sres.per_shard)
+    print(f"  skewed n={ns} shards=2: spilled={sres.spilled} "
+          f"refilled={sres.refilled} rebalanced={sres.rebalanced} "
+          f"per-shard spill={sres.per_shard['spilled']}")
+    assert sres.rebalanced > 0, "skewed workload never triggered rebalance"
+
+    return dict(devices=_DEVICES, n=n, m=m, single_device_s=round(seq_s, 3),
+                sharded=rows, skewed=skew)
+
+
+def main(fast: bool = False) -> dict:
+    """Harness entry point: re-exec with forced host devices, parse JSON."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={_DEVICES}"
+                        ).strip()
+    # device forcing only multiplies CPU-platform devices; pin the platform
+    # so a host accelerator doesn't leave jax.devices() short of _DEVICES
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    cmd = [sys.executable, os.path.abspath(__file__), "--json"]
+    if fast:
+        cmd.append("--fast")
+    import subprocess
+    res = subprocess.run(cmd, capture_output=True, text=True, timeout=3600,
+                         env=env)
+    for line in res.stdout.splitlines():
+        if not line.startswith(_JSON_MARK):
+            print(line)
+    if res.returncode:
+        sys.stderr.write(res.stderr[-4000:])
+        raise RuntimeError("bench_distributed subprocess failed")
+    for line in res.stdout.splitlines():
+        if line.startswith(_JSON_MARK):
+            return json.loads(line[len(_JSON_MARK):])
+    raise RuntimeError("bench_distributed produced no JSON result")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable result line (harness)")
+    args = ap.parse_args()
+    # append (not setdefault): a pre-existing XLA_FLAGS value must not
+    # silently disable device forcing; for a repeated force flag the last
+    # occurrence wins, so the harness-spawned child stays correct too
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={_DEVICES}").strip()
+    os.environ["JAX_PLATFORMS"] = "cpu"   # forcing only affects CPU devices
+    out = _bench(fast=args.fast)
+    if args.json:
+        print(_JSON_MARK + json.dumps(out))

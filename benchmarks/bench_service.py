@@ -8,6 +8,9 @@ Measures:
 2. **cache-hit latency** — repeated identical requests served from the
    LRU+TTL result cache (no engine steps).
 
+Registered in the harness (``python -m benchmarks.run``) and runnable
+alone:
+
     PYTHONPATH=src python benchmarks/bench_service.py [--n-queries 8]
 """
 from __future__ import annotations
@@ -21,20 +24,13 @@ from repro.data.synthetic_graphs import planted_clique_graph
 from repro.service import DiscoveryRequest, DiscoveryService
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=200, help="graph vertices")
-    ap.add_argument("--m", type=int, default=1200, help="graph edges")
-    ap.add_argument("--n-queries", type=int, default=8)
-    ap.add_argument("--hits", type=int, default=200,
-                    help="cache-hit repetitions to time")
-    args = ap.parse_args()
-
-    g = planted_clique_graph(n=args.n, m=args.m, clique_size=7, seed=7)
+def run(n: int = 200, m: int = 1200, n_queries: int = 8,
+        hits: int = 200) -> dict:
+    g = planted_clique_graph(n=n, m=m, clique_size=7, seed=7)
     requests = [
         DiscoveryRequest(graph="bench", workload="clique", k=1 + i,
                          request_id=f"q{i}")
-        for i in range(args.n_queries)
+        for i in range(n_queries)
     ]
 
     # --- sequential reference: one dedicated engine per query ------------
@@ -60,21 +56,43 @@ def main():
 
     # --- cache hits ------------------------------------------------------
     t0 = time.perf_counter()
-    for _ in range(args.hits):
+    for _ in range(hits):
         hit = svc.query(requests[0])
         assert hit.cached
-    hit_s = (time.perf_counter() - t0) / args.hits
+    hit_s = (time.perf_counter() - t0) / hits
 
-    q = args.n_queries
-    print(f"[bench_service] graph n={args.n} m={args.m}, {q} clique queries")
+    print(f"[bench_service] graph n={n} m={m}, {n_queries} clique queries")
     print(f"  sequential Engine.run : {seq_s:.2f}s "
-          f"({q / seq_s:.2f} queries/s)")
+          f"({n_queries / seq_s:.2f} queries/s)")
     print(f"  scheduled batch       : {sched_s:.2f}s "
-          f"({q / sched_s:.2f} queries/s, "
+          f"({n_queries / sched_s:.2f} queries/s, "
           f"{svc.engine_steps_total} engine steps)")
     print(f"  cache hit             : {hit_s * 1e6:.0f}us/query "
           f"({1 / hit_s:.0f} queries/s)")
+    return dict(
+        n=n, m=m, n_queries=n_queries,
+        sequential_s=round(seq_s, 3),
+        sequential_qps=round(n_queries / seq_s, 3),
+        scheduled_s=round(sched_s, 3),
+        scheduled_qps=round(n_queries / sched_s, 3),
+        engine_steps=svc.engine_steps_total,
+        cache_hit_us=round(hit_s * 1e6, 1),
+        cache_hit_qps=round(1 / hit_s, 1))
+
+
+def main(fast: bool = False) -> dict:
+    """Harness entry point (``benchmarks/run.py``)."""
+    if fast:
+        return run(n=120, m=700, n_queries=4, hits=50)
+    return run()
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200, help="graph vertices")
+    ap.add_argument("--m", type=int, default=1200, help="graph edges")
+    ap.add_argument("--n-queries", type=int, default=8)
+    ap.add_argument("--hits", type=int, default=200,
+                    help="cache-hit repetitions to time")
+    args = ap.parse_args()
+    run(n=args.n, m=args.m, n_queries=args.n_queries, hits=args.hits)

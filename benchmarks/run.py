@@ -11,8 +11,8 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import bench_clique, bench_iso, bench_k, bench_pattern, \
-    bench_vpq  # noqa: E402
+from benchmarks import bench_clique, bench_distributed, bench_iso, \
+    bench_k, bench_pattern, bench_service, bench_vpq  # noqa: E402
 
 
 def main():
@@ -26,7 +26,9 @@ def main():
                       ("pattern (Fig 12-14)", bench_pattern),
                       ("iso (Fig 15-17)", bench_iso),
                       ("k-sweep (Fig 18)", bench_k),
-                      ("vpq (Fig 19)", bench_vpq)]:
+                      ("vpq (Fig 19)", bench_vpq),
+                      ("service (§9)", bench_service),
+                      ("distributed (§11)", bench_distributed)]:
         print(f"\n=== {name} ===")
         t0 = time.time()
         results[name] = mod.main(fast=args.fast)

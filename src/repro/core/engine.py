@@ -20,7 +20,11 @@ One engine *super-step* replaces the paper's per-subgraph loop iteration:
 
 Distribution: :func:`make_sharded_bound_sync` builds the one collective the
 distributed engine needs — an all-gather of per-shard result keys so every
-shard prunes against the *global* k-th best (DESIGN.md §4).
+shard prunes against the *global* k-th best (DESIGN.md §4).  The whole
+super-step body (``_step_impl``) takes an optional ``bound_sync`` hook, so
+:class:`repro.distributed.ShardedEngine` runs the identical code per shard
+inside ``shard_map`` — the single-device :class:`Engine` is exactly the
+1-shard specialization (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -45,6 +49,15 @@ class EngineConfig:
     max_steps: int = 100_000
     spill: str = "host"           # VPQ backing: "host" | "disk" | "none"
     spill_dir: Optional[str] = None
+    # device-mesh sharding (DESIGN.md §11): number of frontier shards.  The
+    # single-device Engine ignores it; repro.distributed.ShardedEngine
+    # seed-partitions the frontier over this many devices, with batch /
+    # pool_capacity / max_children read as *per-shard* shapes.  Complete
+    # runs are byte-identical for any shard count (parity-tested), but
+    # budget-truncated runs are not, so like batch/pool_capacity — and
+    # unlike the per-step-identical kernel knobs below — it enters the
+    # service result-cache key.
+    shards: int = 1
     # kernel-path knobs (DESIGN.md §10): a declarative record consumed at
     # computation-construction time (service.api.compile_request reads
     # them when calling make_*_computation) — NOT by the engine loop,
@@ -67,6 +80,8 @@ class EngineResult:
     pruned: int                   # dequeued states dropped by dominance
     spilled: int
     refilled: int
+    rebalanced: int = 0           # spilled entries moved across shards (§11)
+    per_shard: Optional[dict] = None  # ShardedEngine: per-shard stat lists
 
 
 @dataclasses.dataclass
@@ -95,6 +110,43 @@ class EngineState:
     done: bool = False            # pool and VPQ both drained
 
 
+def merge_topk(states: jnp.ndarray, keys: jnp.ndarray, k: int):
+    """Canonical top-k selection over result candidates: key descending,
+    ties broken by the state words lexicographically ascending (signed
+    int32 order, word 0 most significant), duplicates collapsed.
+
+    Candidates may contain the same (state, key) pair more than once — a
+    deferred parent re-enters the pool and contributes its result key again
+    on re-dequeue, and per-shard result sets can both have seen a state the
+    rebalancer moved.  Duplicates are adjacent after the lexicographic sort
+    and all but the first are demoted to empty, so one state can never
+    occupy two result slots (which would both displace the true k-th result
+    and tighten the dominance threshold unsoundly).
+
+    Dedup plus the deterministic tie-break make the result set a pure
+    function of the *set* of discovered (state, key) pairs — insertion
+    order and multiplicity cannot change the outcome — which is what lets
+    a sharded run (any shard count, any interleaving) reproduce the
+    single-device result set byte-for-byte (DESIGN.md §11).  States in
+    empty slots (key == NEG) are zeroed so they too are byte-stable.
+    """
+    s = states.shape[-1]
+    # key is the least-significant sort column so equal states cluster by
+    # key too — without it a NEG-keyed copy sorted between two real-keyed
+    # copies of the same state would hide them from the adjacency check
+    lex = jnp.lexsort((keys,) + tuple(states[:, j]
+                                      for j in reversed(range(s))))
+    ss, kk = states[lex], keys[lex]
+    dup = jnp.concatenate([
+        jnp.zeros((1,), bool),
+        jnp.all(ss[1:] == ss[:-1], axis=1) & (kk[1:] == kk[:-1])])
+    kk = jnp.where(dup, NEG, kk)
+    top = jnp.argsort(kk, stable=True, descending=True)[:k]
+    top_keys = kk[top]
+    top_states = jnp.where((top_keys > NEG)[:, None], ss[top], 0)
+    return top_states, top_keys
+
+
 class Engine:
     """Runs one :class:`SubgraphComputation` to completion (or stepwise)."""
 
@@ -112,7 +164,12 @@ class Engine:
 
     # ------------------------------------------------------------------ step
     def _step_impl(self, pool_states, pool_prio, pool_ub,
-                   result_states, result_keys):
+                   result_states, result_keys, bound_sync=None):
+        """One super-step.  ``bound_sync`` (None for the single-device
+        engine) maps the local result keys to the pruning threshold; the
+        sharded engine passes :func:`make_sharded_bound_sync`'s collective
+        so every shard prunes against the global k-th best (DESIGN.md §11).
+        """
         comp, B, M, C, k = self.comp, self.B, self.M, self.C, self.k
         A = comp.num_actions
 
@@ -123,16 +180,19 @@ class Engine:
         ub_b = pool_ub[idx_b]
         pool_prio = pool_prio.at[idx_b].set(NEG)
 
-        # 2. result insertion (Alg. 1 lines 6-10)
+        # 2. result insertion (Alg. 1 lines 6-10), canonical tie-break
         rkey_b = jnp.where(valid_b, comp.result_key(states_b), NEG)
         merged_keys = jnp.concatenate([result_keys, rkey_b])
         merged_states = jnp.concatenate([result_states, states_b])
-        result_keys, ri = jax.lax.top_k(merged_keys, k)
-        result_states = merged_states[ri]
+        result_states, result_keys = merge_topk(merged_states, merged_keys, k)
 
-        # 3. dominance threshold (the k-th entry; NEG while R not full)
-        threshold = jnp.where(result_keys[k - 1] > NEG,
-                              result_keys[k - 1], NEG)
+        # 3. dominance threshold (the k-th entry; NEG while R not full);
+        #    under a bound_sync this is the *global* k-th best
+        if bound_sync is None:
+            threshold = jnp.where(result_keys[k - 1] > NEG,
+                                  result_keys[k - 1], NEG)
+        else:
+            threshold = bound_sync(result_states, result_keys)
         expand_b = valid_b & (ub_b >= threshold)
         pruned = jnp.sum(valid_b & ~expand_b)
 
@@ -292,14 +352,26 @@ class Engine:
 
 def make_sharded_bound_sync(axis_name: str, k: int):
     """The distributed engine's only collective: exchange per-shard result
-    keys and return the *global* k-th best as the shared pruning threshold.
+    sets and return the *global* k-th best result key as the shared
+    pruning threshold.
 
-    Used inside ``shard_map`` when the frontier is sharded over the ``data``
-    axis (seed partitioning).  All-gathering ``k`` int32 per shard is a few
-    hundred bytes — pruning tightness costs near-zero bandwidth.
+    Gathers each shard's k (state, key) pairs and dedups identical states
+    (:func:`merge_topk`) before taking the k-th best: a deferred parent
+    whose key already entered one shard's local result set can be
+    rebalanced to another shard and deposit its key there too, and keys
+    alone cannot distinguish that duplicate from a legitimate tie —
+    double-counting it would over-tighten the threshold and prune true
+    results (unsound).  All-gathering ``k * (S + 1)`` int32 per shard is
+    still a few KB — pruning tightness costs near-zero bandwidth.
+
+    Used inside ``shard_map`` when the frontier is sharded over the
+    ``data`` axis (seed partitioning) — DESIGN.md §11.
     """
-    def sync(local_result_keys: jnp.ndarray) -> jnp.ndarray:
-        allk = jax.lax.all_gather(local_result_keys, axis_name).reshape(-1)
-        topk, _ = jax.lax.top_k(allk, k)
+    def sync(local_result_states: jnp.ndarray,
+             local_result_keys: jnp.ndarray) -> jnp.ndarray:
+        alls = jax.lax.all_gather(local_result_states, axis_name)
+        allk = jax.lax.all_gather(local_result_keys, axis_name)
+        _, topk = merge_topk(alls.reshape(-1, alls.shape[-1]),
+                             allk.reshape(-1), k)
         return jnp.where(topk[k - 1] > NEG, topk[k - 1], NEG)
     return sync

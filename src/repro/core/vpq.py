@@ -163,7 +163,15 @@ class VirtualPriorityQueue:
                 out_u.append(u)
             if not self.runs[i].exhausted:
                 heapq.heappush(heap, (-self.runs[i].head_prio(), i))
-        self.runs = [r for r in self.runs if not r.exhausted] or []
+        # close exhausted runs as they drop out so the disk backend's .npy
+        # run files are deleted immediately instead of leaking until close()
+        live = []
+        for r in self.runs:
+            if r.exhausted:
+                r.close()
+            else:
+                live.append(r)
+        self.runs = live
         if not out_p:
             return (np.zeros((0, self.state_width), np.int32),
                     np.zeros((0,), np.int32), np.zeros((0,), np.int32))

@@ -1,0 +1,5 @@
+"""Sharded multi-device discovery engine (DESIGN.md §11)."""
+from .sharded_engine import (ShardedEngine, ShardedEngineState,
+                             shard_map_compat)
+
+__all__ = ["ShardedEngine", "ShardedEngineState", "shard_map_compat"]

@@ -1,0 +1,311 @@
+"""Sharded multi-device discovery engine (DESIGN.md §11).
+
+Scales one query across all devices on the host while keeping the paper's
+prioritized-expansion/pruning efficiency.  The decomposition follows
+density-partitioned distributed subgraph mining (Aridhi et al.,
+arXiv:1212.0017): partition-local search plus one small shared bound.
+
+* **seed partitioning** — the initial frontier is dealt round-robin over
+  ``shards`` devices (a 1-D ``data`` mesh); every later state stays on the
+  shard that materialized its seed ancestor unless the rebalancer moves its
+  spilled work.
+* **one jitted shard_map super-step** — each shard runs the *identical*
+  per-shard body, :meth:`repro.core.engine.Engine._step_impl` (dequeue →
+  result merge → prune → targeted expansion → insert), so the single-device
+  :class:`~repro.core.engine.Engine` is exactly the 1-shard specialization.
+  The only collective inside the step is
+  :func:`~repro.core.engine.make_sharded_bound_sync`: each shard's k
+  result (state, key) pairs are gathered, identical states deduplicated,
+  and the global k-th-best key becomes every shard's dominance threshold
+  (k·(S+1) int32 per shard per step — pruning tightness at near-zero
+  bandwidth, DESIGN.md §4).
+* **per-shard spill** — each shard owns a host/disk
+  :class:`~repro.core.vpq.VirtualPriorityQueue`; overflow blocks exit the
+  jitted step per shard and refills apply late dominance pruning against
+  the *global* threshold.
+* **host-side rebalancing** — after refills, shards that cannot refill
+  themselves (occupancy below the C/2 watermark, own VPQ empty) pull
+  spilled work from the most-loaded VPQs.  The move is a priority-ordered
+  k-way merge pop on the donor and a merge-sort insert on the recipient —
+  the paper's priority order is preserved by merging, never shuffled.
+
+Result parity is exact by construction: the result merge uses the
+canonical total order of :func:`~repro.core.engine.merge_topk` (key
+descending, state-words tie-break), and dominance pruning is sound, so any
+complete run — single-device or any shard count — discovers every state
+whose key reaches the final global threshold and selects the identical
+top-k byte-for-byte (parity-asserted in ``tests/test_distributed_engine.py``
+and ``benchmarks/bench_distributed.py``).
+
+Host/device division follows the repo-wide rule (DESIGN.md §2): the jitted
+shard_map owns every fixed-shape loop; the host only moves overflow /
+refill / rebalance blocks and accumulates counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.api import NEG, SubgraphComputation
+from repro.core.engine import (Engine, EngineConfig, EngineResult,
+                               make_sharded_bound_sync, merge_topk)
+from repro.core.vpq import VirtualPriorityQueue
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` without replication checking, across jax versions:
+    ``jax.shard_map(check_vma=)`` (newest), ``jax.shard_map(check_rep=)``,
+    or ``jax.experimental.shard_map`` (jax 0.4.x, where the experimental
+    module is the only home and ``jax.shard_map`` does not exist)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+_STAT_KEYS = ("dequeued", "expanded", "created", "pruned",
+              "pool_occupancy", "threshold")
+
+
+@dataclasses.dataclass
+class ShardedEngineState:
+    """Resumable sharded search state.
+
+    Pool and result arrays are *global* views of the sharded layout:
+    leading axis ``shards * per_shard_size``, sharded over the ``data``
+    mesh axis by the jitted step.  VPQs and counters are host-side.
+    """
+
+    pool_states: jnp.ndarray      # [shards*C, S]
+    pool_prio: jnp.ndarray        # [shards*C]
+    pool_ub: jnp.ndarray          # [shards*C]
+    result_states: jnp.ndarray    # [shards*k, S] (per-shard local top-k)
+    result_keys: jnp.ndarray      # [shards*k]
+    vpqs: List[VirtualPriorityQueue]
+    pool_occupancy: np.ndarray    # [shards] int64
+    steps: int = 0
+    candidates: int = 0
+    expanded: int = 0
+    pruned: int = 0
+    refilled: int = 0
+    rebalanced: int = 0
+    threshold: int = int(NEG)
+    done: bool = False            # every shard pool and VPQ drained
+
+
+class ShardedEngine:
+    """Runs one :class:`SubgraphComputation` sharded over a device mesh.
+
+    Drop-in interface parity with :class:`~repro.core.engine.Engine`
+    (``start`` / ``step`` / ``finalize`` / ``run``), so the service
+    scheduler drives sharded queries unchanged.  ``config.batch`` /
+    ``pool_capacity`` / ``max_children`` are per-shard shapes.
+    """
+
+    def __init__(self, comp: SubgraphComputation, config: EngineConfig):
+        self.comp = comp
+        self.cfg = config
+        self.shards = config.shards
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        devices = jax.devices()
+        if self.shards > len(devices):
+            raise ValueError(
+                f"shards={self.shards} exceeds the {len(devices)} available "
+                f"device(s); force host devices with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                f"or lower `shards`")
+        self.mesh = Mesh(np.asarray(devices[:self.shards]), ("data",))
+
+        # the per-shard engine: supplies the jit-free super-step body and
+        # the derived per-shard shapes (B, C, M, S)
+        self._eng = Engine(comp, dataclasses.replace(config, shards=1))
+        self.B, self.C, self.M = self._eng.B, self._eng.C, self._eng.M
+        self.S, self.k = self._eng.S, config.k
+
+        sync = make_sharded_bound_sync("data", self.k)
+        spec = P("data")
+
+        def body(pool_states, pool_prio, pool_ub, result_states, result_keys):
+            (pool_states, pool_prio, pool_ub, result_states, result_keys,
+             overflow, stats) = self._eng._step_impl(
+                pool_states, pool_prio, pool_ub, result_states, result_keys,
+                bound_sync=sync)
+            # scalar per-shard stats -> [1] so the mesh axis can concatenate
+            stats = {name: stats[name].reshape(1) for name in _STAT_KEYS}
+            return (pool_states, pool_prio, pool_ub, result_states,
+                    result_keys, overflow, stats)
+
+        self._step_sharded = jax.jit(shard_map_compat(
+            body, mesh=self.mesh, in_specs=(spec,) * 5,
+            out_specs=((spec,) * 5 + ((spec, spec, spec),
+                                      {name: spec for name in _STAT_KEYS}))))
+        # refill / rebalance blocks enter through the same merge-sort insert
+        # as overflow handling, one fixed [shards*C] block per call
+        self._insert_sharded = jax.jit(shard_map_compat(
+            self._eng._insert_impl, mesh=self.mesh, in_specs=(spec,) * 6,
+            out_specs=(spec,) * 6))
+
+    # ----------------------------------------------------------------- start
+    def start(self) -> ShardedEngineState:
+        """Seed-partition the frontier and return a resumable state."""
+        cfg, S, C, k, shards = self.cfg, self.S, self.C, self.k, self.shards
+        vpqs = []
+        for i in range(shards):
+            sub = (os.path.join(cfg.spill_dir, f"shard{i}")
+                   if cfg.spill_dir is not None else None)
+            vpqs.append(VirtualPriorityQueue(
+                state_width=S, backend=cfg.spill, spill_dir=sub))
+
+        states0, prio0, ub0 = (np.asarray(a) for a in
+                               self.comp.init_frontier())
+        n0 = states0.shape[0]
+
+        pool_states = np.zeros((shards, C, S), np.int32)
+        pool_prio = np.full((shards, C), NEG, np.int32)
+        pool_ub = np.full((shards, C), NEG, np.int32)
+        occ = np.zeros(shards, np.int64)
+        for i in range(shards):
+            # round-robin seed partition: shard i gets seeds i, i+shards, ...
+            s_i, p_i, u_i = states0[i::shards], prio0[i::shards], ub0[i::shards]
+            order = np.argsort(p_i.astype(np.int64), kind="stable")[::-1]
+            s_i, p_i, u_i = s_i[order], p_i[order], u_i[order]
+            m = min(len(p_i), C)
+            pool_states[i, :m], pool_prio[i, :m], pool_ub[i, :m] = \
+                s_i[:m], p_i[:m], u_i[:m]
+            occ[i] = m
+            if len(p_i) > m:   # more seeds than per-shard pool slots
+                vpqs[i].maybe_push(s_i[m:], p_i[m:], u_i[m:])
+
+        return ShardedEngineState(
+            pool_states=jnp.asarray(pool_states.reshape(shards * C, S)),
+            pool_prio=jnp.asarray(pool_prio.reshape(shards * C)),
+            pool_ub=jnp.asarray(pool_ub.reshape(shards * C)),
+            result_states=jnp.zeros((shards * k, S), jnp.int32),
+            result_keys=jnp.full((shards * k,), NEG, jnp.int32),
+            vpqs=vpqs, pool_occupancy=occ, candidates=int(n0))
+
+    # ------------------------------------------------------------------ step
+    def step(self, st: ShardedEngineState) -> ShardedEngineState:
+        """Advance every shard one super-step; spill, refill, rebalance."""
+        shards, C, S = self.shards, self.C, self.S
+        (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
+         st.result_keys, overflow, stats) = self._step_sharded(
+            st.pool_states, st.pool_prio, st.pool_ub,
+            st.result_states, st.result_keys)
+        stats = jax.device_get(stats)             # each value: [shards]
+        o_s, o_p, o_u = (np.asarray(a) for a in overflow)
+        o_per = len(o_p) // shards
+
+        st.steps += 1
+        st.expanded += int(stats["expanded"].sum())
+        st.candidates += int(stats["created"].sum())
+        st.pruned += int(stats["pruned"].sum())
+        st.threshold = int(stats["threshold"][0])   # replicated by the sync
+        occ = stats["pool_occupancy"].astype(np.int64)
+
+        for i in range(shards):
+            sl = slice(i * o_per, (i + 1) * o_per)
+            st.vpqs[i].maybe_push(o_s[sl], o_p[sl], o_u[sl])
+
+        # ---- refill: per shard, below the C/2 watermark, from its own VPQ
+        blk_s = np.zeros((shards, C, S), np.int32)
+        blk_p = np.full((shards, C), NEG, np.int32)
+        blk_u = np.full((shards, C), NEG, np.int32)
+        fill = np.zeros(shards, np.int64)
+        for i in range(shards):
+            if occ[i] < C // 2 and len(st.vpqs[i]):
+                r_s, r_p, r_u = st.vpqs[i].pop_chunk(
+                    C - int(occ[i]), min_ub=st.threshold)
+                r = len(r_p)
+                if r:
+                    blk_s[i, :r], blk_p[i, :r], blk_u[i, :r] = r_s, r_p, r_u
+                    fill[i] = r
+                    st.refilled += r
+
+        # ---- rebalance: shards that cannot refill themselves pull spilled
+        # work from the most-loaded VPQs (priority order preserved: the
+        # donor pop is a sorted k-way merge, the insert a merge-sort)
+        needy = [i for i in range(shards)
+                 if occ[i] + fill[i] < C // 2 and len(st.vpqs[i]) == 0]
+        donors = sorted((i for i in range(shards) if len(st.vpqs[i])),
+                        key=lambda i: -len(st.vpqs[i]))
+        for i in needy:
+            for d in donors:
+                room = C // 2 - int(occ[i] + fill[i])
+                if room <= 0:
+                    break
+                if not len(st.vpqs[d]):
+                    continue
+                m_s, m_p, m_u = st.vpqs[d].pop_chunk(
+                    min(room, len(st.vpqs[d])), min_ub=st.threshold)
+                m = len(m_p)
+                if m:
+                    off = int(fill[i])
+                    blk_s[i, off:off + m] = m_s
+                    blk_p[i, off:off + m] = m_p
+                    blk_u[i, off:off + m] = m_u
+                    fill[i] += m
+                    st.rebalanced += m
+
+        if fill.any():
+            (st.pool_states, st.pool_prio, st.pool_ub, ov_s, ov_p, ov_u) = \
+                self._insert_sharded(
+                    st.pool_states, st.pool_prio, st.pool_ub,
+                    jnp.asarray(blk_s.reshape(shards * C, S)),
+                    jnp.asarray(blk_p.reshape(shards * C)),
+                    jnp.asarray(blk_u.reshape(shards * C)))
+            # occ + fill <= C by construction, so the insert overflow is
+            # all-NEG padding; push defensively anyway
+            ov_s, ov_p, ov_u = (np.asarray(a) for a in (ov_s, ov_p, ov_u))
+            per = len(ov_p) // shards
+            for i in range(shards):
+                sl = slice(i * per, (i + 1) * per)
+                st.vpqs[i].maybe_push(ov_s[sl], ov_p[sl], ov_u[sl])
+
+        st.pool_occupancy = occ + fill
+        st.done = bool((st.pool_occupancy == 0).all()
+                       and all(len(v) == 0 for v in st.vpqs))
+        return st
+
+    # -------------------------------------------------------------- finalize
+    def finalize(self, st: ShardedEngineState) -> EngineResult:
+        """Merge per-shard result sets canonically, close VPQs, package."""
+        result_states, result_keys = merge_topk(
+            st.result_states, st.result_keys, self.k)
+        per_shard = dict(
+            spilled=[int(v.total_spilled) for v in st.vpqs],
+            vpq_backlog=[len(v) for v in st.vpqs],
+            pool_occupancy=[int(x) for x in st.pool_occupancy])
+        for v in st.vpqs:
+            v.close()
+        return EngineResult(
+            result_states=np.asarray(result_states),
+            result_keys=np.asarray(result_keys),
+            steps=st.steps, candidates=st.candidates, expanded=st.expanded,
+            pruned=st.pruned,
+            spilled=sum(per_shard["spilled"]), refilled=st.refilled,
+            rebalanced=st.rebalanced, per_shard=per_shard)
+
+    # ------------------------------------------------------------------- run
+    def run(self, progress_every: int = 0) -> EngineResult:
+        st = self.start()
+        while not st.done and st.steps < self.cfg.max_steps:
+            self.step(st)
+            if progress_every and st.steps % progress_every == 0:
+                print(f"[{self.comp.name}/x{self.shards}] step={st.steps} "
+                      f"occ={st.pool_occupancy.tolist()} "
+                      f"vpq={[len(v) for v in st.vpqs]} "
+                      f"thr={st.threshold} cand={st.candidates}")
+        return self.finalize(st)

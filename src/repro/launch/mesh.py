@@ -13,7 +13,18 @@ from __future__ import annotations
 
 import numpy as np
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:                                    # jax >= 0.5 explicit-sharding API
+    from jax.sharding import AxisType
+except ImportError:                     # older jax: meshes are Auto-typed
+    AxisType = None
+
+
+def _make_mesh(devices: np.ndarray, axes) -> Mesh:
+    if AxisType is None:
+        return Mesh(devices, axes)
+    return Mesh(devices, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -26,12 +37,10 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"need {n} devices for mesh {shape}; have {len(devices)}. "
             "Run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "(launch/dryrun.py sets this) or on real hardware.")
-    return Mesh(np.asarray(devices[:n]).reshape(shape), axes,
-                axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
 def make_host_mesh() -> Mesh:
     """1x1 mesh over the local device — used by smoke tests and examples."""
-    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
-                ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                      ("data", "model"))

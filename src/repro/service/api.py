@@ -82,6 +82,13 @@ class DiscoveryRequest:
     # are excluded from the result-cache key — DESIGN.md §10)
     use_pallas: bool = False          # Pallas masked-intersection path
     interpret: Optional[bool] = None  # None = auto-detect backend
+    # device-mesh sharding (engine workloads; DESIGN.md §11).  shards > 1
+    # runs the query on the sharded multi-device engine with batch /
+    # pool_capacity as per-shard shapes.  Complete runs are byte-identical
+    # for any shard count (parity-tested), but budget-truncated runs are
+    # not — so like batch/pool_capacity (and unlike the kernel knobs) it
+    # is part of the result-cache key.
+    shards: int = 1
     # service knobs
     use_cache: bool = True
     request_id: Optional[str] = None
@@ -96,7 +103,7 @@ class DiscoveryRequest:
             raise ValidationError(f"unknown request fields: {sorted(unknown)}")
         try:
             for f in ("k", "batch", "pool_capacity", "step_budget",
-                      "candidate_budget", "max_hops", "m_edges"):
+                      "candidate_budget", "max_hops", "m_edges", "shards"):
                 if d.get(f) is not None:
                     d[f] = int(d[f])
             for f in ("induced", "use_pallas", "use_cache", "interpret"):
@@ -132,6 +139,13 @@ class DiscoveryRequest:
         if self.candidate_budget is not None and self.candidate_budget <= 0:
             raise ValidationError(
                 f"candidate_budget must be >= 1, got {self.candidate_budget}")
+        if self.shards < 1:
+            raise ValidationError(f"shards must be >= 1, got {self.shards}")
+        if self.shards > 1 and self.workload == "pattern":
+            raise ValidationError(
+                "shards > 1 applies to engine workloads only; pattern "
+                "mining runs on the host-side aggregate model "
+                "(DESIGN.md §11)")
         g = registry.get(self.graph)
 
         if self.workload == "weighted-clique":
@@ -184,16 +198,22 @@ class DiscoveryRequest:
         """Canonical, JSON-stable dict of everything that determines the
         *result* of this request — the cache-key payload.
 
-        Excludes ``use_cache`` and ``request_id`` (service plumbing) and the
-        kernel-path knobs ``use_pallas`` / ``interpret`` (parity-tested to
-        leave results byte-identical, so kernel- and reference-path runs of
-        the same query share one cache entry).  Query edges are normalized
+        Excludes ``use_cache`` and ``request_id`` (service plumbing) and
+        the kernel-path knobs ``use_pallas`` / ``interpret``
+        (parity-tested to leave results byte-identical *per step*, so
+        kernel- and reference-path runs of the same query share one cache
+        entry).  ``shards`` IS included, like ``batch``/``pool_capacity``:
+        complete runs are shard-count invariant, but a run truncated by
+        ``step_budget``/``candidate_budget`` is not, and the cache key
+        cannot know at lookup time which case a payload is.  Query edges
+        are normalized
         to sorted ``(min, max)`` pairs so isomorphic edge orderings of the
         same query graph key identically.
         """
         spec: Dict[str, Any] = dict(
             workload=self.workload, k=self.k, batch=self.batch,
-            pool_capacity=self.pool_capacity, step_budget=self.step_budget,
+            pool_capacity=self.pool_capacity, shards=self.shards,
+            step_budget=self.step_budget,
             candidate_budget=self.candidate_budget)
         if self.workload == "weighted-clique":
             spec["weights"] = list(self.weights)
@@ -274,7 +294,7 @@ def compile_request(req: DiscoveryRequest, registry: GraphRegistry,
     # callers (service, benchmarks) select the kernel path per request
     cfg = EngineConfig(k=req.k, batch=req.batch,
                        pool_capacity=req.pool_capacity,
-                       max_steps=req.step_budget,
+                       max_steps=req.step_budget, shards=req.shards,
                        use_pallas=req.use_pallas, interpret=req.interpret)
 
     if req.workload == "clique":

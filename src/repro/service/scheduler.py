@@ -88,7 +88,8 @@ class EngineQueryTask:
             results=results,
             stats=dict(steps=res.steps, candidates=res.candidates,
                        expanded=res.expanded, pruned=res.pruned,
-                       spilled=res.spilled, refilled=res.refilled),
+                       spilled=res.spilled, refilled=res.refilled,
+                       rebalanced=res.rebalanced),
             terminated=self.terminated or "complete")
         return self._payload
 
@@ -150,7 +151,8 @@ class PatternQueryTask:
                      for _, code in res.patterns],
             stats=dict(steps=self.miner.steps, candidates=res.candidates,
                        expanded=res.groups_expanded,
-                       pruned=res.groups_pruned, spilled=0, refilled=0),
+                       pruned=res.groups_pruned, spilled=0, refilled=0,
+                       rebalanced=0),
             terminated=self.terminated or "complete")
         return self._payload
 
@@ -273,7 +275,7 @@ class DiscoveryService:
         # are enforced per-task (so they're dropped from the spec), while
         # use_pallas/interpret change the kernel path without changing
         # results (so they're added back — both are deliberately absent
-        # from the result-cache key)
+        # from the result-cache key; shards is already in the spec)
         engine_spec = req.canonical_spec()
         engine_spec.pop("step_budget", None)
         engine_spec.pop("candidate_budget", None)
@@ -283,7 +285,11 @@ class DiscoveryService:
         engine = self._engines.get(engine_key)
         if engine is None:
             compiled = compile_request(req, self.registry, graph=graph)
-            engine = Engine(compiled.comp, compiled.engine_cfg)
+            if compiled.engine_cfg.shards > 1:
+                from repro.distributed import ShardedEngine
+                engine = ShardedEngine(compiled.comp, compiled.engine_cfg)
+            else:
+                engine = Engine(compiled.comp, compiled.engine_cfg)
             self._engines.put(engine_key, engine)
         return EngineQueryTask(req, engine)
 

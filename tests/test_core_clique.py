@@ -1,9 +1,11 @@
 """Clique discovery: engine vs exact brute force, pruning efficacy, spill."""
 import numpy as np
+import jax.numpy as jnp
 import pytest
 
+from repro.core.api import NEG
 from repro.core.clique import make_clique_computation
-from repro.core.engine import Engine, EngineConfig
+from repro.core.engine import Engine, EngineConfig, merge_topk
 from repro.core.exhaustive import (ArabesqueStyleClique,
                                    brute_force_max_clique,
                                    nuri_np_clique_candidates)
@@ -75,6 +77,48 @@ def test_spill_path_identical_results(tmp_path, spill):
         spill_dir=str(tmp_path) if spill == "disk" else None)).run()
     assert list(small.result_keys) == list(big.result_keys)
     assert small.spilled > 0
+
+
+def test_merge_topk_canonical_and_deduped():
+    """The result merge collapses duplicate (state, key) pairs — a deferred
+    parent contributes its result key again on re-dequeue — and breaks key
+    ties by state content, insertion-order independently."""
+    states = jnp.asarray([[1, 2], [3, 4], [1, 2], [5, 6], [7, 7]], jnp.int32)
+    keys = jnp.asarray([10, 9, 10, 8, NEG], jnp.int32)
+    s, k = merge_topk(states, keys, 3)
+    assert list(k) == [10, 9, 8]          # duplicate [1,2] holds ONE slot
+    assert np.asarray(s).tolist() == [[1, 2], [3, 4], [5, 6]]
+    # permutation invariance (the sharded-parity prerequisite)
+    perm = [3, 2, 4, 0, 1]
+    s2, k2 = merge_topk(states[jnp.asarray(perm)], keys[jnp.asarray(perm)], 3)
+    assert np.array_equal(s, s2) and np.array_equal(k, k2)
+    # key ties break by state words ascending; NEG slots come back zeroed
+    s3, k3 = merge_topk(states, jnp.asarray([5, 5, 5, 5, NEG], jnp.int32), 5)
+    assert np.asarray(s3).tolist() == [[1, 2], [3, 4], [5, 6], [0, 0], [0, 0]]
+    assert list(k3) == [5, 5, 5, NEG, NEG]
+    # a NEG-keyed copy sorted between two real-keyed copies of the same
+    # state must not hide them from the dedup (key is a sort column)
+    s4, k4 = merge_topk(jnp.asarray([[1, 2]] * 3, jnp.int32),
+                        jnp.asarray([10, NEG, 10], jnp.int32), 3)
+    assert list(k4) == [10, NEG, NEG]
+
+
+def test_deferral_pressure_no_duplicate_results():
+    """Dequeuing far more parents than the materialization budget M admits
+    (M floors at A = n) defers parents constantly; re-dequeued parents must
+    not occupy two result slots (regression: duplicate result rows
+    displaced the true k-th result and over-tightened the threshold)."""
+    g = densifying_graph(80, 400, seed=6)
+    comp = make_clique_computation(g)
+    # low deferral pressure vs heavy: B=48 parents share an M=80 budget
+    ref = Engine(comp, EngineConfig(k=5, batch=4, pool_capacity=8192,
+                                    max_steps=50000)).run()
+    squeezed = Engine(comp, EngineConfig(k=5, batch=48, pool_capacity=8192,
+                                         max_steps=50000)).run()
+    assert np.array_equal(ref.result_keys, squeezed.result_keys)
+    assert np.array_equal(ref.result_states, squeezed.result_states)
+    rows = [tuple(r) for r in np.asarray(squeezed.result_states)]
+    assert len(set(rows)) == len(rows), "duplicate result states"
 
 
 def test_batch_one_matches_paper_order():

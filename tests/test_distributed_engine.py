@@ -1,59 +1,223 @@
-"""Distributed engine pieces: the sharded pruning-bound collective and a
-shard_map frontier step lowered on a multi-device mesh (subprocess with
-forced host devices so the main test process keeps 1 device)."""
+"""Sharded multi-device discovery engine (DESIGN.md §11).
+
+Multi-device coverage runs in subprocesses with forced host devices so the
+main test process keeps its single device (the rest of the suite assumes
+it).  The same tests also exist as in-process variants that activate when
+the interpreter already sees multiple devices — the CI ``distributed`` job
+runs this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+to exercise those paths directly on CPU-only runners.
+"""
+import dataclasses
+import os
 import subprocess
 import sys
 import textwrap
 
+import numpy as np
+import pytest
 
-def test_sharded_bound_sync_and_frontier_step():
-    prog = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+
+from repro.core.clique import make_clique_computation
+from repro.core.engine import Engine, EngineConfig
+from repro.data.synthetic_graphs import planted_clique_graph
+from repro.distributed import ShardedEngine
+
+
+def _run_forced(prog: str, devices: int = 8, timeout: int = 420):
+    """Run ``prog`` in a subprocess with N forced host devices.
+
+    Inherits the full environment (a stripped env hangs JAX/XLA startup in
+    sandboxed containers) and overrides only the device flags.
+    """
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(prog)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+
+
+# ----------------------------------------------------------- bound collective
+def test_sharded_bound_sync_multi_device():
+    """The §4 collective: global k-th best over the *deduplicated* union of
+    per-shard result sets."""
+    res = _run_forced("""
         import numpy as np
         import jax, jax.numpy as jnp
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from jax.sharding import Mesh, PartitionSpec as P
         from repro.core.engine import make_sharded_bound_sync
         from repro.core.api import NEG
+        from repro.distributed import shard_map_compat
 
         mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
         k = 3
         sync = make_sharded_bound_sync("data", k)
+        run = jax.jit(shard_map_compat(
+            sync, mesh=mesh, in_specs=(P("data"), P("data")),
+            out_specs=P()))
 
-        # per-shard local top-k result keys; global 3rd-best of the union
-        local = np.full((8, k), NEG, np.int32)
-        local[0] = [50, 10, 5]
-        local[3] = [40, 30, NEG]
-        local[7] = [45, 2, NEG]
-        want_threshold = 40          # union sorted: 50,45,40,30,... → 3rd
+        def pack(entries):
+            # entries: {shard: [(state_tuple, key), ...]}
+            states = np.zeros((8, k, 2), np.int32)
+            keys = np.full((8, k), NEG, np.int32)
+            for i, rows in entries.items():
+                for j, (s, key) in enumerate(rows):
+                    states[i, j], keys[i, j] = s, key
+            return jnp.asarray(states), jnp.asarray(keys)
 
-        out = jax.jit(jax.shard_map(
-            sync, mesh=mesh, in_specs=P("data", None),
-            out_specs=P(), check_vma=False))(jnp.asarray(local))
-        assert int(out) == want_threshold, out
+        # distinct states: plain global 3rd-best of the union
+        st, ks = pack({0: [((1, 1), 50), ((2, 2), 10), ((3, 3), 5)],
+                       3: [((4, 4), 40), ((5, 5), 30)],
+                       7: [((6, 6), 45), ((7, 7), 2)]})
+        out = run(st, ks)
+        assert int(out) == 40, out   # union sorted: 50, 45, 40, 30, ...
 
-        # frontier expansion sharded over seeds: lower+compile proof
-        from repro.core.clique import make_clique_computation
-        from repro.data.synthetic_graphs import densifying_graph
-        g = densifying_graph(64, 256, seed=0)
-        comp = make_clique_computation(g)
-        states, prio, ub = comp.init_frontier()
+        # the same state in two shards' local sets (deferred parent later
+        # rebalanced) must count ONCE: keys [50,50,45,...] dedup to a
+        # 3rd-best of 30, not 45
+        st, ks = pack({0: [((1, 1), 50), ((2, 2), 10)],
+                       3: [((1, 1), 50), ((5, 5), 30)],
+                       7: [((6, 6), 45)]})
+        out = run(st, ks)
+        assert int(out) == 30, out
 
-        def shard_step(states):
-            cp, cu = comp.score_children(states)
-            local_best = jnp.max(cu)
-            global_best = jax.lax.pmax(local_best, "data")
-            return cp, global_best
-
-        fn = jax.jit(jax.shard_map(
-            shard_step, mesh=mesh, in_specs=P("data", None),
-            out_specs=(P("data", None), P()), check_vma=False))
-        cp, gb = fn(states)
-        assert cp.shape == (64, 64)
-        print("SHARDED-ENGINE-OK", int(gb))
+        # an all-NEG union must stay NEG (no threshold while R not full)
+        st, ks = pack({})
+        out = run(st, ks)
+        assert int(out) == NEG, out
+        print("BOUND-SYNC-OK")
     """)
-    res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                         text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
-    assert "SHARDED-ENGINE-OK" in res.stdout, res.stderr[-2000:]
+    assert "BOUND-SYNC-OK" in res.stdout, res.stderr[-2000:]
+
+
+# ------------------------------------------------------------- 1-shard parity
+def test_single_shard_is_engine_specialization():
+    """ShardedEngine(shards=1) runs on the default device and reproduces
+    Engine.run() byte-for-byte — the 1-shard specialization claim."""
+    g = planted_clique_graph(n=80, m=300, clique_size=6, seed=1)
+    comp = make_clique_computation(g)
+    cfg = EngineConfig(k=3, batch=16, pool_capacity=512, max_steps=50_000)
+    ref = Engine(comp, cfg).run()
+    res = ShardedEngine(comp, dataclasses.replace(cfg, shards=1)).run()
+    assert np.array_equal(ref.result_keys, res.result_keys)
+    assert np.array_equal(ref.result_states, res.result_states)
+    assert res.rebalanced == 0
+    assert res.per_shard["spilled"] == [0]
+
+
+def test_shards_exceeding_devices_rejected():
+    with pytest.raises(ValueError, match="exceeds"):
+        g = planted_clique_graph(n=40, m=100, clique_size=4, seed=0)
+        cfg = EngineConfig(k=1, shards=len(jax.devices()) + 1)
+        ShardedEngine(make_clique_computation(g), cfg)
+
+
+# -------------------------------------------------------- multi-shard parity
+_PARITY_PROG = """
+    import dataclasses
+    import numpy as np
+    from repro.core.clique import make_clique_computation
+    from repro.core.engine import Engine, EngineConfig
+    from repro.core.graph import GraphStore
+    from repro.core.iso import build_iso_index, make_iso_computation
+    from repro.data.synthetic_graphs import (densifying_graph, labeled_graph,
+                                             planted_clique_graph)
+    from repro.distributed import ShardedEngine
+
+    def check(comp, cfg, shards_list):
+        ref = Engine(comp, cfg).run()
+        out = []
+        for shards in shards_list:
+            res = ShardedEngine(
+                comp, dataclasses.replace(cfg, shards=shards)).run()
+            assert np.array_equal(ref.result_keys, res.result_keys), (
+                shards, ref.result_keys, res.result_keys)
+            assert np.array_equal(ref.result_states, res.result_states), \\
+                shards
+            out.append(res)
+        return ref, out
+
+    # clique parity across 1/2/8 shards
+    g = planted_clique_graph(n=80, m=300, clique_size=6, seed=1)
+    check(make_clique_computation(g),
+          EngineConfig(k=3, batch=16, pool_capacity=512, max_steps=50_000),
+          (1, 2, 8))
+    print("CLIQUE-PARITY-OK", flush=True)
+
+    # iso parity across 1/2/8 shards (triangle query, labeled graph)
+    gl = labeled_graph(n=60, m=150, n_labels=3, seed=5)
+    icomp = make_iso_computation(
+        gl, [(0, 1), (1, 2), (0, 2)], [1, 1, 1],
+        build_iso_index(gl, max_hops=2))
+    check(icomp,
+          EngineConfig(k=3, batch=16, pool_capacity=1024, max_steps=50_000),
+          (1, 2, 8))
+    print("ISO-PARITY-OK", flush=True)
+
+    # skewed clique (hot subtree on shard 0 of 2, tiny pools): spill and
+    # rebalance must both trigger without breaking parity
+    gs = densifying_graph(96, 500, seed=3)
+    members = np.arange(0, 24, 2)
+    extra = [(int(u), int(v)) for i, u in enumerate(members)
+             for v in members[i + 1:]]
+    gs = GraphStore.from_edges(
+        96, np.concatenate([gs.edge_array, np.array(extra, np.int64)]))
+    _, (sres,) = check(
+        make_clique_computation(gs),
+        EngineConfig(k=3, batch=8, pool_capacity=64, max_steps=50_000),
+        (2,))
+    assert sres.spilled > 0, "skew scenario never spilled"
+    assert sres.refilled > 0
+    assert sres.rebalanced > 0, "rebalancer never triggered"
+    assert len(sres.per_shard["spilled"]) == 2
+    print("REBALANCE-OK", sres.spilled, sres.rebalanced, flush=True)
+
+    # service layer: a shards=2 request threads through compile_request
+    # and returns the same payload as the single-device run
+    from repro.service import DiscoveryRequest, DiscoveryService
+    svc = DiscoveryService()
+    svc.register_graph("g", g)
+    r1 = svc.query(DiscoveryRequest(graph="g", workload="clique", k=3,
+                                    use_cache=False))
+    r2 = svc.query(DiscoveryRequest(graph="g", workload="clique", k=3,
+                                    shards=2, use_cache=False))
+    assert r2.status == "ok", r2.error
+    assert r1.result_keys == r2.result_keys
+    assert r1.results == r2.results
+    print("SERVICE-SHARDS-OK", flush=True)
+"""
+
+
+def test_sharded_parity_rebalance_service_multi_device():
+    res = _run_forced(_PARITY_PROG, devices=8)
+    for marker in ("CLIQUE-PARITY-OK", "ISO-PARITY-OK", "REBALANCE-OK",
+                   "SERVICE-SHARDS-OK"):
+        assert marker in res.stdout, (res.stdout, res.stderr[-3000:])
+
+
+# ------------------------------------------------ in-process (CI distributed)
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs >= 8 devices (CI distributed job forces "
+                           "8 host devices)")
+def test_sharded_parity_inprocess_multi_device(tmp_path):
+    """Same parity claim without a subprocess, plus the disk spill backend:
+    per-shard VPQs write to per-shard subdirs and clean up on finalize."""
+    g = planted_clique_graph(n=80, m=300, clique_size=6, seed=1)
+    comp = make_clique_computation(g)
+    cfg = EngineConfig(k=3, batch=8, pool_capacity=64, max_steps=50_000,
+                       spill="disk", spill_dir=str(tmp_path))
+    ref = Engine(comp, dataclasses.replace(cfg, spill="host",
+                                           spill_dir=None)).run()
+    for shards in (2, 8):
+        res = ShardedEngine(comp,
+                            dataclasses.replace(cfg, shards=shards)).run()
+        assert np.array_equal(ref.result_keys, res.result_keys)
+        assert np.array_equal(ref.result_states, res.result_states)
+        if shards == 2:   # 8 shards have 8x the pool: nothing overflows
+            assert res.spilled > 0
+        for i in range(shards):   # leak-free: every run file closed
+            sub = tmp_path / f"shard{i}"
+            assert not sub.exists() or list(sub.iterdir()) == []

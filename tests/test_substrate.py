@@ -109,9 +109,11 @@ def test_compressed_psum_error_feedback():
         size=(32, 32)).astype(np.float32))}
     err = init_error_state(grads)
 
+    from repro.distributed import shard_map_compat
+
     @jax.jit
     def step(g, e):
-        return jax.shard_map(
+        return shard_map_compat(
             lambda g_, e_: compressed_psum(g_, e_, "dp"),
             mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),) * 2,
             out_specs=(jax.sharding.PartitionSpec(),) * 2,

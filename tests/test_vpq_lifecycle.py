@@ -1,0 +1,111 @@
+"""VPQ disk-backend lifecycle: spill-file cleanup and ragged run buffers.
+
+Regression tests for the run-file leak where ``pop_chunk`` dropped
+exhausted runs without closing them, leaving ``.npy`` spill files on disk
+until process exit.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.vpq import VirtualPriorityQueue, _Run
+
+
+def _entries(lo, hi, state_width=6):
+    prio = np.arange(lo, hi, dtype=np.int32)
+    states = np.repeat(prio[:, None], state_width, 1).astype(np.int32)
+    return states, prio, prio.copy()
+
+
+def _spill_files(d):
+    return sorted(f for f in os.listdir(d) if f.endswith(".npy"))
+
+
+def test_disk_run_files_removed_as_runs_exhaust(tmp_path):
+    """Multi-round spill -> refill -> close leaves an empty spill dir, and
+    each run's files disappear as soon as the merge exhausts it."""
+    d = str(tmp_path)
+    vpq = VirtualPriorityQueue(state_width=6, backend="disk", spill_dir=d,
+                               buffer_size=16, run_flush_size=32)
+    for round_ in range(4):                    # 4 runs of 32 entries each
+        s, p, u = _entries(round_ * 32, round_ * 32 + 32)
+        vpq.maybe_push(s, p, u)
+        vpq._flush_pending()
+    assert len(vpq) == 128
+    assert len(_spill_files(d)) == 4 * 3       # states/prio/ub per run
+
+    # drain in chunks: the k-way merge empties runs lowest-priority-last;
+    # every exhausted run must close (and delete its files) immediately
+    seen_files = len(_spill_files(d))
+    out = 0
+    while len(vpq):
+        _, p, _ = vpq.pop_chunk(24)
+        out += len(p)
+        now = len(_spill_files(d))
+        assert now <= seen_files
+        seen_files = now
+    assert out == 128
+    assert _spill_files(d) == [], "exhausted runs leaked spill files"
+
+    # a second spill/refill cycle on the same queue also cleans up
+    s, p, u = _entries(0, 40)
+    vpq.maybe_push(s, p, u)
+    got = vpq.pop_chunk(64)[1]
+    assert len(got) == 40
+    assert _spill_files(d) == []
+    vpq.close()
+    assert _spill_files(d) == []
+
+
+def test_disk_refill_respects_min_ub_and_cleans_up(tmp_path):
+    """Late dominance pruning drops entries but still closes their runs."""
+    d = str(tmp_path)
+    vpq = VirtualPriorityQueue(state_width=4, backend="disk", spill_dir=d,
+                               run_flush_size=16)
+    s, p, u = _entries(0, 64, state_width=4)
+    vpq.maybe_push(s, p, u)
+    _, got, _ = vpq.pop_chunk(64, min_ub=32)   # entries with ub < 32 die
+    assert list(got) == list(range(63, 31, -1))
+    assert len(vpq) == 0
+    assert _spill_files(d) == []
+
+
+@pytest.mark.parametrize("backend", ["host", "disk"])
+@pytest.mark.parametrize("n,buffer_size", [(10, 4), (17, 8), (8, 8), (5, 64)])
+def test_run_ragged_last_buffer_block(tmp_path, backend, n, buffer_size):
+    """_Run block reads: the last buffer block is ragged whenever
+    buffer_size does not divide n; pops must cross block boundaries and
+    deliver every entry in priority order."""
+    prio = np.arange(n, dtype=np.int32)[::-1].copy()   # decreasing
+    states = np.repeat(prio[:, None], 3, 1).astype(np.int32)
+    run = _Run(states, prio, prio.copy(), backend, str(tmp_path),
+               run_id=0, buffer_size=buffer_size)
+    got = []
+    while not run.exhausted:
+        assert run.head_prio() == n - 1 - len(got)
+        state, p, ub = run.pop()
+        assert list(state) == [p] * 3 and ub == p
+        got.append(p)
+    assert got == list(range(n - 1, -1, -1))
+    run.close()
+    assert _spill_files(str(tmp_path)) == []
+
+
+def test_pop_chunk_merges_across_ragged_runs(tmp_path):
+    """Interleaved priorities across runs with ragged buffers: the merge
+    must yield a globally sorted stream."""
+    vpq = VirtualPriorityQueue(state_width=3, backend="disk",
+                               spill_dir=str(tmp_path), buffer_size=4,
+                               run_flush_size=1)
+    rng = np.random.default_rng(0)
+    all_prio = rng.permutation(37).astype(np.int32)
+    for chunk in np.array_split(all_prio, 5):    # 5 ragged runs
+        states = np.repeat(chunk[:, None], 3, 1).astype(np.int32)
+        vpq.maybe_push(states, chunk, chunk.copy())
+        vpq._flush_pending()
+    _, got, _ = vpq.pop_chunk(37)
+    assert list(got) == sorted(all_prio.tolist(), reverse=True)
+    assert len(vpq) == 0
+    assert _spill_files(str(tmp_path)) == []
+    vpq.close()
