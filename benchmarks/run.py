@@ -12,29 +12,47 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import bench_clique, bench_distributed, bench_iso, \
-    bench_k, bench_pattern, bench_service, bench_vpq  # noqa: E402
+    bench_k, bench_labeled, bench_pattern, bench_service, \
+    bench_vpq  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write per-benchmark wall-clock timings + "
+                         "result rows to PATH (e.g. BENCH_PR4.json) — the "
+                         "perf-trajectory artifact CI uploads")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     results = {}
+    timings = {}
     for name, mod in [("clique (Fig 9-11)", bench_clique),
                       ("pattern (Fig 12-14)", bench_pattern),
                       ("iso (Fig 15-17)", bench_iso),
                       ("k-sweep (Fig 18)", bench_k),
                       ("vpq (Fig 19)", bench_vpq),
                       ("service (§9)", bench_service),
-                      ("distributed (§11)", bench_distributed)]:
+                      ("distributed (§11)", bench_distributed),
+                      ("labeled (§12)", bench_labeled)]:
         print(f"\n=== {name} ===")
         t0 = time.time()
         results[name] = mod.main(fast=args.fast)
-        print(f"[{name}] {time.time() - t0:.1f}s")
+        timings[name] = round(time.time() - t0, 3)
+        print(f"[{name}] {timings[name]:.1f}s")
     with open(os.path.join(args.out, "results.json"), "w") as f:
         json.dump(results, f, indent=1, default=str)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"fast": args.fast,
+                       "total_seconds": round(sum(timings.values()), 3),
+                       "benchmarks": {
+                           name: {"seconds": timings[name],
+                                  "results": results[name]}
+                           for name in results}},
+                      f, indent=1, default=str)
+        print(f"per-benchmark timings written to {args.json}")
 
     # roofline table if dry-run artifacts exist
     try:

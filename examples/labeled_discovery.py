@@ -1,0 +1,63 @@
+"""Label-constrained discovery over an attributed graph (DESIGN.md §12).
+
+Registers a graph with skewed vertex labels + edge types, then runs:
+
+1. a label-constrained iso query (label classes + allowed-vertex set +
+   allowed edge types) with predicate pushdown,
+2. the same query with host-side filtering (`label_filter="post"`) —
+   byte-identical answer, demonstrably not a cache hit (the filter mode
+   is part of the cache key),
+3. labeled pattern mining, pushdown vs post — identical patterns, fewer
+   candidates materialized under pushdown (the paper's cost metric).
+
+Run: PYTHONPATH=src python examples/labeled_discovery.py
+"""
+from repro.data.synthetic_graphs import attributed_graph
+from repro.service import DiscoveryRequest, DiscoveryService
+
+
+def main():
+    svc = DiscoveryService()
+    svc.register_graph(
+        "proteins", attributed_graph(n=200, m=900, n_labels=5,
+                                     n_edge_labels=2, seed=7))
+
+    iso = dict(
+        graph="proteins", workload="iso", k=3,
+        q_edges=[[0, 1], [1, 2], [0, 2]], q_labels=[1, 1, 1],
+        label_predicate={"vertex_any_of": [1, 2],
+                         "q_any_of": [[1, 2], [1], [1, 2]],
+                         "edge_any_of": [0]})
+
+    push = svc.query(DiscoveryRequest.from_dict(iso))
+    print(f"[iso/pushdown] keys={push.result_keys} "
+          f"matches={push.results} candidates={push.stats['candidates']}")
+
+    post = svc.query(DiscoveryRequest.from_dict(
+        dict(iso, label_filter="post")))
+    print(f"[iso/post]     keys={post.result_keys} cached={post.cached} "
+          f"candidates={post.stats['candidates']}")
+    assert push.result_keys == post.result_keys, "modes must agree"
+    assert not post.cached, "label_filter is part of the cache key"
+
+    pat = dict(graph="proteins", workload="pattern", k=3, m_edges=2,
+               label_predicate={"vertex_any_of": [0, 1, 2]})
+    p_push = svc.query(DiscoveryRequest.from_dict(pat))
+    p_post = svc.query(DiscoveryRequest.from_dict(
+        dict(pat, label_filter="post")))
+    assert p_push.result_keys == p_post.result_keys
+    print(f"[pattern]      supports={p_push.result_keys}  candidates: "
+          f"pushdown={p_push.stats['candidates']} vs "
+          f"host-filter={p_post.stats['candidates']}")
+
+    # identical spec (any label-set ordering) -> served from cache
+    again = svc.query(DiscoveryRequest.from_dict(
+        dict(iso, label_predicate={"vertex_any_of": [2, 1],
+                                   "q_any_of": [[2, 1], [1], [1, 2]],
+                                   "edge_any_of": [0]})))
+    print(f"[iso repeat]   cached={again.cached} "
+          f"(engine steps total: {svc.engine_steps_total})")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .graph import GraphStore
+from .labels import LABEL_FILTERS, LabelPredicate
 from .patterns import (Code, PatternGroup, expand_group, seed_groups)
 
 
@@ -56,7 +57,10 @@ class TopKPatternMiner:
     def __init__(self, g: GraphStore, m_edges: int, k: int = 1,
                  max_candidates: int = 50_000_000,
                  use_pallas: bool = False,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 predicate: Optional[LabelPredicate] = None,
+                 label_filter: str = "pushdown"):
+        assert label_filter in LABEL_FILTERS, label_filter
         self.g = g
         self.m_edges = m_edges
         self.k = k
@@ -65,7 +69,13 @@ class TopKPatternMiner:
         # DESIGN.md §10) — forwarded to every expand_group call
         self.use_pallas = use_pallas
         self.interpret = interpret
-        groups = seed_groups(g)
+        # label-constrained mining (DESIGN.md §12): the predicate filters
+        # seeds here and rides every expand_group call; label_filter picks
+        # pushdown (filter before materialization) vs post (the host-side
+        # baseline) — identical patterns/supports, different candidates
+        self.predicate = predicate
+        self.label_filter = label_filter
+        groups = seed_groups(g, predicate=predicate)
         self.candidates = sum(len(gr.embeddings) for gr in groups.values())
         self._counter = itertools.count()
         self._pq: List[tuple] = []
@@ -103,7 +113,8 @@ class TopKPatternMiner:
         else:
             children, created = expand_group(
                 self.g, gr, use_pallas=self.use_pallas,
-                interpret=self.interpret)
+                interpret=self.interpret, predicate=self.predicate,
+                label_filter=self.label_filter)
             self.candidates += created
             self.expanded += 1
             if self.candidates > self.max_candidates:
@@ -130,10 +141,13 @@ class TopKPatternMiner:
 def topk_frequent_patterns(g: GraphStore, m_edges: int, k: int = 1,
                            max_candidates: int = 50_000_000,
                            use_pallas: bool = False,
-                           interpret: Optional[bool] = None) -> MiningResult:
+                           interpret: Optional[bool] = None,
+                           predicate: Optional[LabelPredicate] = None,
+                           label_filter: str = "pushdown") -> MiningResult:
     """Nuri: prioritized + pruned top-k mining of M-edge patterns (Alg. 2)."""
     miner = TopKPatternMiner(g, m_edges, k, max_candidates,
-                             use_pallas=use_pallas, interpret=interpret)
+                             use_pallas=use_pallas, interpret=interpret,
+                             predicate=predicate, label_filter=label_filter)
     while not miner.done:
         miner.step()
     return miner.result()

@@ -138,14 +138,41 @@ def nuri_np_clique_candidates(graph: GraphStore,
 # ------------------------------------------------------------------------ iso
 def brute_force_iso(graph: GraphStore, q_edges: List[Tuple[int, int]],
                     q_labels: List[int], induced: bool = True,
-                    k: int = 1) -> List[Tuple[int, Tuple[int, ...]]]:
-    """Top-k induced subgraph isomorphisms by total degree (host oracle)."""
+                    k: int = 1,
+                    predicate=None) -> List[Tuple[int, Tuple[int, ...]]]:
+    """Top-k induced subgraph isomorphisms by total degree (host oracle).
+
+    ``predicate`` (a :class:`repro.core.labels.LabelPredicate`) applies
+    the label-constrained semantics of DESIGN.md §12: per-query-vertex
+    label classes (``q_any_of``), a global allowed-vertex set
+    (``vertex_any_of``), and adjacency restricted to allowed edge types
+    (``edge_any_of``) — scores remain full-graph degree sums.
+    """
     nq = len(q_labels)
     q_adj = [[False] * nq for _ in range(nq)]
     for a, b in q_edges:
         q_adj[a][b] = q_adj[b][a] = True
     deg = graph.degrees
     labels = graph.labels
+    if predicate is not None and labels is None and (
+            predicate.vertex_any_of is not None
+            or predicate.q_any_of is not None):
+        raise ValueError(
+            "label predicate requires a vertex-labeled graph")
+    classes = [
+        set(predicate.q_any_of[j]) if predicate is not None
+        and predicate.q_any_of is not None else {q_labels[j]}
+        for j in range(nq)]
+    allowed = (set(predicate.vertex_any_of)
+               if predicate is not None
+               and predicate.vertex_any_of is not None else None)
+    if predicate is not None and predicate.edge_any_of is not None:
+        eadj = predicate.adjacency(graph)
+
+        def has_edge(u, v):
+            return bool((int(eadj[u, v // 32]) >> (v % 32)) & 1)
+    else:
+        has_edge = graph.has_edge
     results = []
 
     def rec(mapping: List[int]):
@@ -157,11 +184,13 @@ def brute_force_iso(graph: GraphStore, q_edges: List[Tuple[int, int]],
         for v in range(graph.n):
             if v in mapping:
                 continue
-            if labels is not None and int(labels[v]) != q_labels[d]:
+            if labels is not None and int(labels[v]) not in classes[d]:
+                continue
+            if allowed is not None and int(labels[v]) not in allowed:
                 continue
             ok = True
             for i in range(d):
-                has = graph.has_edge(mapping[i], v)
+                has = has_edge(mapping[i], v)
                 if q_adj[i][d] != has and (induced or q_adj[i][d]):
                     ok = False
                     break

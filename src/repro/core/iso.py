@@ -12,8 +12,12 @@ vertex, -1 unmatched), ``depth`` (matched count), ``score``.
 Targeted expansion: the candidate set for the next query vertex ``j`` is
 computed as a bitset intersection over all already-matched query vertices
 ``i`` — ``adj(map[i])`` when ``(i,j) ∈ E_q`` and its complement otherwise —
-AND the label-``l_j`` vertex bitset, minus used vertices.  Only vertices in
-that set are ever materialized (Ullmann-style forward checking).
+AND the label-``l_j`` vertex bitset (or the OR-ed bitset of ``j``'s label
+class under a :class:`~repro.core.labels.LabelPredicate`), minus used
+vertices.  Only vertices in that set are ever materialized (Ullmann-style
+forward checking).  Label predicates push down into the same product:
+the allowed-vertex bitset seeds the constraint mask and ``edge_any_of``
+swaps in the type-restricted adjacency (DESIGN.md §12).
 
 Pruning/prioritization: the per-vertex index ``index[v, l, h]`` = max degree
 over label-``l`` vertices exactly ``h`` hops from ``v`` (paper Fig. 7) gives
@@ -32,22 +36,39 @@ import jax.numpy as jnp
 from . import bitset
 from .api import NEG, SubgraphComputation
 from .graph import GraphStore
+from .labels import LABEL_FILTERS, LabelPredicate
 
 
 # ----------------------------------------------------------------- the index
-def build_iso_index(graph: GraphStore, max_hops: int) -> np.ndarray:
+def build_iso_index(graph: GraphStore, max_hops: int,
+                    predicate: Optional[LabelPredicate] = None
+                    ) -> np.ndarray:
     """``index[v, l, h]`` = max degree over label-l vertices exactly h hops
     from v (h in 1..max_hops; h index 0 is hop 1).  Shape [N, L, H].
 
     Built with dense boolean matmuls (device) — the paper notes index
     construction is embarrassingly parallel; here one matmul per hop does
     all vertices at once.
+
+    When a predicate restricts edge types (``edge_any_of``), hop
+    reachability must be computed on the *restricted* adjacency — full-
+    graph hop distances do not bound restricted-graph ones, so the full
+    index would be unsound for label-constrained queries (a valid match
+    at restricted distance h can sit at full distance < h and miss its
+    exact-hop index slot).  Degrees stay full-graph: the relevance score
+    is the full-graph degree sum regardless of the predicate
+    (DESIGN.md §12).  Pass the same predicate here and to
+    :func:`make_iso_computation`; the service layer keys its index cache
+    by (graph fingerprint, max_hops, allowed edge types) and does this
+    automatically.
     """
     assert graph.labels is not None, "iso index requires a labeled graph"
     n = graph.n
     n_labels = int(graph.labels.max()) + 1
     adj = jnp.zeros((n, n), jnp.float32)
     ea = graph.edge_array
+    if predicate is not None and predicate.edge_any_of is not None:
+        ea = ea[predicate.edge_mask_csr(graph)]
     adj = adj.at[ea[:, 0], ea[:, 1]].set(1.0)
     deg = jnp.asarray(graph.degrees, jnp.float32)
     labels = np.asarray(graph.labels)
@@ -119,7 +140,10 @@ def make_iso_computation(graph: GraphStore,
                          induced: bool = True,
                          use_pallas: bool = False,
                          interpret: Optional[bool] = None,
-                         cand_path: str = "batched") -> SubgraphComputation:
+                         cand_path: str = "batched",
+                         predicate: Optional[LabelPredicate] = None,
+                         label_filter: str = "pushdown"
+                         ) -> SubgraphComputation:
     """Build the iso :class:`SubgraphComputation`.
 
     Candidate-generation path (byte-identical results, DESIGN.md §10):
@@ -135,9 +159,37 @@ def make_iso_computation(graph: GraphStore,
     * ``cand_path="map"`` — the per-state loop run truly one state at a
       time (``lax.map``), the paper's Algorithm-1 form and the baseline
       ``benchmarks/bench_iso.py`` measures the batched paths against.
+
+    Label-constrained discovery (DESIGN.md §12): ``predicate`` restricts
+    which data vertices/edges may participate.  ``q_any_of`` replaces the
+    exact per-query-vertex label with a label *class* (the row operand of
+    the kernel becomes the class's OR-ed label bitset); ``edge_any_of``
+    swaps the constraint product's adjacency for the type-restricted
+    adjacency (both structural — they change matching semantics and apply
+    in every mode).  ``vertex_any_of`` is a pure filter with two
+    placements selected by ``label_filter``:
+
+    * ``"pushdown"`` — the allowed-vertex bitset seeds the per-row
+      constraint mask of the masked-intersection kernel (infeasible
+      candidates die inside the kernel at no extra pass) *and* the
+      priority index is restricted to allowed labels, so states with no
+      label-feasible extension are dominance-pruned before expansion —
+      the paper's proactive pruning;
+    * ``"post"`` — the unconstrained candidate grid is materialized and
+      the predicate is applied afterwards as a boolean AND (the
+      host-side-filtering baseline; the upper-bound index never sees the
+      predicate).
+
+    Complete runs return byte-identical top-k in both modes
+    (``benchmarks/bench_labeled.py`` asserts it while measuring the
+    pushdown win); budget-truncated runs may differ, which is why
+    ``label_filter`` joins the service result-cache key.
     """
     assert cand_path in ("batched", "vmap", "map"), cand_path
+    assert label_filter in LABEL_FILTERS, label_filter
     assert graph.labels is not None
+    if predicate is not None:
+        predicate.validate(graph, "iso", nq=len(q_labels))
     n = graph.n
     nq = len(q_labels)
     S = nq + 2
@@ -152,22 +204,55 @@ def make_iso_computation(graph: GraphStore,
         q_adj_o[inv[a], inv[b]] = q_adj_o[inv[b], inv[a]] = True
     hops_o = _query_hops(q_edges, nq)[order]       # distance from seed vertex
 
+    # per-query-vertex label classes (exact q_labels when no q_any_of),
+    # in expansion order
+    if predicate is not None and predicate.q_any_of is not None:
+        classes_o = [tuple(predicate.q_any_of[v]) for v in order]
+    else:
+        classes_o = [(int(l),) for l in q_labels_o]
+    # the global vertex predicate, as packed bitset + boolean vector
+    allowed_vbits = predicate.vertex_bits(graph) if predicate else None
+    allowed_vmask = predicate.vertex_mask(graph) if predicate else None
+    pushdown = label_filter == "pushdown"
+
     max_hops = index.shape[2]
     hops_clamped = np.clip(hops_o, 1, max_hops)
-    # ub_rest[v, d] = Σ_{t >= d} index[v, label(t), hop(t)]  (seed = v)
-    per_t = index[:, q_labels_o, hops_clamped - 1]          # [N, nq]
+    # ub_rest[v, d] = Σ_{t >= d} max_{l ∈ L_t} index[v, l, hop(t)] (seed = v)
+    # where L_t is slot t's label class — under pushdown additionally
+    # intersected with the allowed-label set, which tightens the bound
+    # (still sound: it over-approximates the best completion that satisfies
+    # the predicate).  The post baseline keeps the unrestricted classes.
+    per_t = np.zeros((n, nq), np.int32)
+    for t in range(nq):
+        lt = classes_o[t]
+        if pushdown and predicate is not None and \
+                predicate.vertex_any_of is not None:
+            lt = tuple(l for l in lt if l in predicate.vertex_any_of)
+        if lt:
+            per_t[:, t] = index[:, list(lt), hops_clamped[t] - 1].max(axis=1)
     suffix = np.cumsum(per_t[:, ::-1], axis=1)[:, ::-1]     # [N, nq]
     ub_rest = np.concatenate(
         [suffix, np.zeros((n, 1), np.int32)], axis=1)       # [N, nq+1]
 
+    # constraint-product adjacency: restricted to allowed edge types when
+    # the predicate carries edge_any_of (structural; both filter modes)
+    adjc = predicate.adjacency(graph) if predicate is not None \
+        else graph.adj_bits
+    # class bitsets: the kernel's per-row label operand, one row per slot
+    class_bits = np.stack([
+        np.bitwise_or.reduce(graph.label_bits[list(cls)], axis=0)
+        for cls in classes_o])                              # [nq, W]
+
     deg = jnp.asarray(graph.degrees, jnp.int32)
-    labels = jnp.asarray(graph.labels)
-    adj_bits = jnp.asarray(graph.adj_bits)
-    label_bits = jnp.asarray(graph.label_bits)
+    adj_bits = jnp.asarray(adjc)
+    class_bits_d = jnp.asarray(class_bits)
     ub_rest_d = jnp.asarray(ub_rest, jnp.int32)
     q_adj_d = jnp.asarray(q_adj_o)
-    q_labels_d = jnp.asarray(q_labels_o)
     eye_bits = jnp.asarray(bitset.eye_table(n))
+    allowed_vbits_d = (jnp.asarray(allowed_vbits)
+                       if allowed_vbits is not None else None)
+    allowed_vmask_d = (jnp.asarray(allowed_vmask)
+                       if allowed_vmask is not None else None)
     if use_pallas:
         from repro.kernels import ops as kops
 
@@ -195,8 +280,14 @@ def make_iso_computation(graph: GraphStore,
         mapping = states[:, :nq]                        # [B, nq]
         d = states[:, nq]                               # [B]
         j = jnp.minimum(d, nq - 1)
-        lbl = label_bits[q_labels_d[j]]                 # [B, W]
-        mask = jnp.full((b, w), full_word)
+        lbl = class_bits_d[j]                           # [B, W]
+        if pushdown and allowed_vbits_d is not None:
+            # predicate pushdown: the allowed-vertex bitset seeds the
+            # per-row kernel mask, so label-infeasible candidates are
+            # culled inside the masked intersection (DESIGN.md §12)
+            mask = jnp.broadcast_to(allowed_vbits_d, (b, w))
+        else:
+            mask = jnp.full((b, w), full_word)
         used = jnp.zeros((b, w), jnp.uint32)
         for i in range(nq):                             # static: nq small
             mi = jnp.maximum(mapping[:, i], 0)          # [B]
@@ -216,7 +307,9 @@ def make_iso_computation(graph: GraphStore,
         mapping = state[:nq]
         d = state[nq]
         j = jnp.minimum(d, nq - 1)
-        acc = label_bits[q_labels_d[j]]
+        acc = class_bits_d[j]
+        if pushdown and allowed_vbits_d is not None:
+            acc = acc & allowed_vbits_d
 
         def body(i, carry):
             acc, used = carry
@@ -236,8 +329,15 @@ def make_iso_computation(graph: GraphStore,
         return jnp.where(d < nq, acc, jnp.zeros((w,), jnp.uint32))
 
     def init_frontier():
-        lbl0 = int(q_labels_o[0])
-        seeds = np.nonzero(np.asarray(graph.labels) == lbl0)[0]
+        # seed = vertices matching slot 0's label class; the vertex
+        # predicate applies here in BOTH filter modes — the frontier is
+        # seeded host-side, and an unfiltered disallowed seed could
+        # complete into a violating result (the post mode only defers
+        # filtering of *candidate* vertices)
+        seed_ok = np.isin(np.asarray(graph.labels), list(classes_o[0]))
+        if allowed_vmask is not None:
+            seed_ok &= allowed_vmask
+        seeds = np.nonzero(seed_ok)[0]
         n0 = len(seeds)
         states = np.full((n0, S), -1, np.int32)
         states[:, 0] = seeds
@@ -263,6 +363,10 @@ def make_iso_computation(graph: GraphStore,
         else:  # "map": one state at a time (the pre-batching loop form)
             cand = jax.lax.map(_cand_bits, states)               # [B, W]
             in_cand = bitset.to_bool(cand, n)                    # [B, N]
+        if not pushdown and allowed_vmask_d is not None:
+            # host-side-filter baseline: the unconstrained candidate grid
+            # was materialized above; the predicate lands only now
+            in_cand = in_cand & allowed_vmask_d[None, :]
         d = states[:, nq]
         score = states[:, nq + 1]
         seed = jnp.maximum(states[:, 0], 0)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from . import bitset
 from .graph import GraphStore
+from .labels import LABEL_FILTERS, LabelPredicate
 
 Code = Tuple[Tuple[int, int, int, int], ...]   # ((i, j, li, lj), ...)
 
@@ -182,24 +183,24 @@ class PatternGroup:
 
 
 # ------------------------------------------------- vectorized data-graph ops
-def _has_edge_vec(g: GraphStore, u: np.ndarray, v: np.ndarray) -> np.ndarray:
-    adj = g.adj_bits
+def _has_edge_vec(adj: np.ndarray, u: np.ndarray, v: np.ndarray) -> np.ndarray:
     word = adj[u, v // 32]
     return (word >> (v % 32).astype(np.uint32)) & 1 > 0
 
 
-# per-graph device bitsets for the kernel probe path, keyed by content
-# fingerprint so repeated expand_group calls don't re-upload adjacency
+# per-(graph, edge-type restriction) device bitsets for the kernel probe
+# path, keyed by content fingerprint so repeated expand_group calls don't
+# re-upload adjacency
 _DEVICE_BITS_CACHE: Dict[str, tuple] = {}
 _DEVICE_BITS_CAPACITY = 8
 
 
-def _device_bits(g: GraphStore) -> tuple:
-    key = g.fingerprint
+def _device_bits(g: GraphStore, adj: np.ndarray, adj_key: str) -> tuple:
+    key = f"{g.fingerprint}:{adj_key}"
     ent = _DEVICE_BITS_CACHE.pop(key, None)     # LRU: re-insert on hit
     if ent is None:
         w = bitset.num_words(g.n)
-        ent = (jnp.asarray(g.adj_bits), jnp.asarray(bitset.eye_table(g.n)),
+        ent = (jnp.asarray(adj), jnp.asarray(bitset.eye_table(g.n)),
                jnp.full((1, w), 0xFFFFFFFF, jnp.uint32))
         while len(_DEVICE_BITS_CACHE) >= _DEVICE_BITS_CAPACITY:
             _DEVICE_BITS_CACHE.pop(next(iter(_DEVICE_BITS_CACHE)))
@@ -209,7 +210,8 @@ def _device_bits(g: GraphStore) -> tuple:
 
 def _edge_probe(g: GraphStore, u: np.ndarray, v: np.ndarray,
                 use_pallas: bool = False,
-                interpret: Optional[bool] = None) -> np.ndarray:
+                interpret: Optional[bool] = None,
+                predicate: Optional[LabelPredicate] = None) -> np.ndarray:
     """Batched edge-existence probe: ``out[e] = (u[e], v[e]) in E``.
 
     Reference path: numpy word-gather into the packed adjacency.  Kernel
@@ -217,11 +219,20 @@ def _edge_probe(g: GraphStore, u: np.ndarray, v: np.ndarray,
     kernel (rows = adjacency rows, row mask = one-hot target bitsets,
     single all-ones column).  Rows are padded to the next power of two so
     ragged embedding batches reuse a handful of kernel traces.
+
+    Under a predicate with ``edge_any_of``, both paths probe the
+    type-restricted adjacency (DESIGN.md §12) — the restriction rides the
+    same packed layout, so the kernel call shape is unchanged.
     """
+    if predicate is not None and predicate.edge_any_of is not None:
+        adj = predicate.adjacency(g)
+        adj_key = ",".join(map(str, predicate.edge_any_of))
+    else:
+        adj, adj_key = g.adj_bits, ""
     if not use_pallas or len(u) == 0:
-        return _has_edge_vec(g, u, v)
+        return _has_edge_vec(adj, u, v)
     from repro.kernels import ops as kops
-    adj_d, eye_d, ones = _device_bits(g)
+    adj_d, eye_d, ones = _device_bits(g, adj, adj_key)
     e = len(u)
     ep = 1 << max(3, (e - 1).bit_length())
     up = np.zeros(ep, np.int64)
@@ -234,28 +245,47 @@ def _edge_probe(g: GraphStore, u: np.ndarray, v: np.ndarray,
 
 
 def _gather_neighbors(g: GraphStore, vs: np.ndarray):
-    """All (row, neighbor) pairs for sources ``vs`` — fully vectorized CSR."""
+    """All (row, neighbor, CSR slot) triples for sources ``vs`` — fully
+    vectorized CSR.  The slot index maps each pair back to its
+    ``edge_labels`` entry (edge-type filtering)."""
     counts = g.degrees[vs].astype(np.int64)
     total = int(counts.sum())
     if total == 0:
-        return (np.zeros(0, np.int64), np.zeros(0, np.int32))
+        return (np.zeros(0, np.int64), np.zeros(0, np.int32),
+                np.zeros(0, np.int64))
     rows = np.repeat(np.arange(len(vs), dtype=np.int64), counts)
     starts = g.indptr[vs].astype(np.int64)
     offset = np.arange(total, dtype=np.int64) - \
         np.repeat(np.cumsum(counts) - counts, counts)
-    flat = g.indices[np.repeat(starts, counts) + offset]
-    return rows, flat
+    slots = np.repeat(starts, counts) + offset
+    return rows, g.indices[slots], slots
 
 
-def seed_groups(g: GraphStore) -> Dict[Code, PatternGroup]:
+def seed_groups(g: GraphStore,
+                predicate: Optional[LabelPredicate] = None
+                ) -> Dict[Code, PatternGroup]:
     """All one-edge groups with minimal codes (paper Fig. 5 step 1):
     one embedding per *directed* edge whose code ``(0,1,la,lb)`` is minimal
-    (``la <= lb``; both orientations when ``la == lb``)."""
+    (``la <= lb``; both orientations when ``la == lb``).
+
+    A predicate filters the seed edge list up front in every mode — the
+    seed pass is host-side either way; the pushdown-vs-post distinction
+    concerns the per-step extension hot path (:func:`expand_group`).
+    """
     assert g.labels is not None
+    if predicate is not None:
+        predicate.validate(g, "pattern")
     ea = g.edge_array                       # both directions present
     la = g.labels[ea[:, 0]]
     lb = g.labels[ea[:, 1]]
     keep = la <= lb
+    if predicate is not None:
+        vm = predicate.vertex_mask(g)
+        if vm is not None:
+            keep &= vm[ea[:, 0]] & vm[ea[:, 1]]
+        em = predicate.edge_mask_csr(g)     # aligned with edge_array rows
+        if em is not None:
+            keep &= em
     groups: Dict[Code, PatternGroup] = {}
     for key in np.unique(np.stack([la[keep], lb[keep]], 1), axis=0):
         m = keep & (la == key[0]) & (lb == key[1])
@@ -266,7 +296,9 @@ def seed_groups(g: GraphStore) -> Dict[Code, PatternGroup]:
 
 def expand_group(g: GraphStore, group: PatternGroup,
                  use_pallas: bool = False,
-                 interpret: Optional[bool] = None
+                 interpret: Optional[bool] = None,
+                 predicate: Optional[LabelPredicate] = None,
+                 label_filter: str = "pushdown"
                  ) -> Tuple[Dict[Code, PatternGroup], int]:
     """Pattern-oriented expansion: extend every embedding by one
     rightmost-path edge; child groups keyed by (minimal) code.
@@ -275,9 +307,22 @@ def expand_group(g: GraphStore, group: PatternGroup,
     the masked-intersection kernel (:func:`_edge_probe`); results are
     byte-identical to the numpy reference path.
 
+    Label-constrained mining (DESIGN.md §12): ``edge_any_of`` restricts
+    both the forward CSR gather and the backward bitset probes to allowed
+    edge types (structural, every mode).  ``vertex_any_of`` has two
+    placements: ``label_filter="pushdown"`` drops disallowed-label
+    neighbors *before* child embeddings are materialized (the paper's
+    proactive pruning — they never count as candidates), while ``"post"``
+    materializes them, counts them, and then filters — the host-side
+    baseline.  Child groups and supports are identical in both modes;
+    only ``candidates_created`` (and the work it measures) differs.
+
     Returns (children, candidates_created) — the latter is the paper's cost
     metric (embeddings materialized, pre minimality filtering).
     """
+    assert label_filter in LABEL_FILTERS, label_filter
+    vmask = predicate.vertex_mask(g) if predicate is not None else None
+    emask = predicate.edge_mask_csr(g) if predicate is not None else None
     code, emb = group.code, group.embeddings
     nv = emb.shape[1]
     rmpath = code_rightmost_path(code)
@@ -308,18 +353,31 @@ def expand_group(g: GraphStore, group: PatternGroup,
         hits = _edge_probe(
             g, np.tile(emb[:, right], len(back_js)),
             np.concatenate([emb[:, j] for j in back_js]),
-            use_pallas, interpret).reshape(len(back_js), len(emb))
+            use_pallas, interpret,
+            predicate=predicate).reshape(len(back_js), len(emb))
         for row, j in enumerate(back_js):
             child_code = tuple(code) + \
                 ((right, j, vlabels[right], vlabels[j]),)
             _add(child_code, emb[hits[row]])
 
     # --- forward extensions from every rightmost-path vertex
+    allowed_lw = (set(predicate.vertex_any_of)
+                  if vmask is not None else None)
     for i in rmpath:
-        rows, nbr = _gather_neighbors(g, emb[:, i])
+        rows, nbr, slots = _gather_neighbors(g, emb[:, i])
         if len(rows) == 0:
             continue
+        if emask is not None:             # edge-type restriction: structural
+            keep = emask[slots]
+            rows, nbr = rows[keep], nbr[keep]
+        if vmask is not None and label_filter == "pushdown":
+            # predicate pushdown: disallowed-label neighbors never become
+            # embeddings (and never count as candidates)
+            keep = vmask[nbr]
+            rows, nbr = rows[keep], nbr[keep]
         # exclude neighbors already used by the embedding
+        if len(rows) == 0:
+            continue
         used = (emb[rows] == nbr[:, None]).any(axis=1)
         rows, nbr = rows[~used], nbr[~used]
         if len(rows) == 0:
@@ -327,6 +385,12 @@ def expand_group(g: GraphStore, group: PatternGroup,
         nl = g.labels[nbr]
         for lw in np.unique(nl):
             m = nl == lw
+            if allowed_lw is not None and int(lw) not in allowed_lw:
+                # post mode only (pushdown filtered above): the host-side
+                # baseline materializes these embeddings, counts them as
+                # candidates, then drops them
+                created += int(m.sum())
+                continue
             child_code = tuple(code) + ((i, nv, vlabels[i], int(lw)),)
             child_emb = np.concatenate(
                 [emb[rows[m]], nbr[m, None].astype(np.int32)], axis=1)

@@ -12,6 +12,10 @@ relevant structure:
 * :func:`powerlaw_graph` — preferential-attachment for skew-degree behavior.
 * :func:`labeled_graph` — ER with vertex labels (CiteSeer-like) for pattern
   mining / isomorphism.
+* :func:`attributed_graph` — ER with *skewed* vertex labels plus edge
+  types (RDF/protein-interaction-like), for the label-constrained
+  workloads: the geometric label frequencies give every selectivity
+  regime a label set to sweep (``benchmarks/bench_labeled.py``).
 """
 from __future__ import annotations
 
@@ -74,3 +78,30 @@ def labeled_graph(n: int, m: int, n_labels: int, seed: int = 0) -> GraphStore:
     g = densifying_graph(n, m, seed)
     labels = rng.integers(0, n_labels, size=n).astype(np.int32)
     return GraphStore.from_edges(n, g.edge_array, labels=labels)
+
+
+def attributed_graph(n: int, m: int, n_labels: int, n_edge_labels: int = 0,
+                     skew: float = 0.6, seed: int = 0) -> GraphStore:
+    """ER(n, m) with skewed vertex labels and (optionally) edge types.
+
+    Vertex labels follow a geometric distribution: label ``l`` has
+    relative frequency ``skew**l`` (normalized), so low-index labels are
+    common and high-index labels rare — a label predicate allowing only
+    the tail labels is *low-selectivity* (few allowed vertices), which is
+    the regime where predicate pushdown pays (DESIGN.md §12).  Every
+    label is guaranteed at least one vertex.  Edge types are uniform over
+    ``n_edge_labels`` (0 = untyped graph).
+    """
+    assert n_labels >= 1 and n >= n_labels
+    rng = np.random.default_rng(seed + 1)
+    g = densifying_graph(n, m, seed)
+    freq = skew ** np.arange(n_labels)
+    labels = rng.choice(n_labels, size=n, p=freq / freq.sum())
+    # guarantee every label occurs so predicates over any label are
+    # non-degenerate (deterministic: first n_labels vertices)
+    labels[:n_labels] = np.arange(n_labels)
+    ea = g.edge_array
+    edge_labels = (rng.integers(0, n_edge_labels, size=len(ea))
+                   if n_edge_labels > 0 else None)
+    return GraphStore.from_edges(n, ea, labels=labels.astype(np.int32),
+                                 edge_labels=edge_labels)

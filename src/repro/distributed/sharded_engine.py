@@ -40,6 +40,13 @@ and ``benchmarks/bench_distributed.py``).
 Host/device division follows the repo-wide rule (DESIGN.md §2): the jitted
 shard_map owns every fixed-shape loop; the host only moves overflow /
 refill / rebalance blocks and accumulates counters.
+
+Label-constrained computations (DESIGN.md §12) thread through unchanged:
+the predicate's bitsets — class rows, allowed-vertex mask, restricted
+adjacency — are closure constants of ``score_children``, replicated to
+every shard exactly like the adjacency itself, so the sharded engine needs
+no label-specific code and the §11 byte-parity argument covers labeled
+runs verbatim (asserted in ``tests/test_labeled.py``).
 """
 from __future__ import annotations
 

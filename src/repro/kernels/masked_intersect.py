@@ -7,7 +7,9 @@ Contract (``W`` = uint32 words per bitset, ``a/mask [B, W]``, ``b [N, W]``)::
     counts[r, c] = popcount(a[r] & mask[r] & b[c])        # int32 [B, N]
 
 ``mask`` is the per-row constraint bitset (``None`` = all-ones).  The same
-product serves three call shapes:
+product serves every workload's call shape (the full operand table lives
+in docs/KERNELS.md — label-constrained variants reuse these shapes with
+predicate bitsets folded into the operands, DESIGN.md §12):
 
 * **cross counts** (clique): ``a = P`` candidate bitsets, ``b = ext`` masks,
   no row mask — ``counts`` is the |P| of every child clique

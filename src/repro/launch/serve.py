@@ -8,7 +8,19 @@ Two modes share this entry point:
 * ``--mode discovery`` — the multi-query subgraph-discovery request loop
   (DESIGN.md §9): JSONL requests in, JSON responses out, executed by
   :class:`repro.service.DiscoveryService` (round-robin scheduler + result
-  cache) against a registry of demo graphs.
+  cache) against a registry of demo graphs (``demo-social`` unlabeled,
+  ``demo-citeseer`` vertex-labeled, ``demo-attributed`` vertex + edge
+  labels).  Label-constrained requests (DESIGN.md §12) add a
+  ``label_predicate``, e.g.::
+
+      {"graph": "demo-attributed", "workload": "iso", "k": 3,
+       "q_edges": [[0, 1], [1, 2], [0, 2]], "q_labels": [1, 1, 1],
+       "label_predicate": {"vertex_any_of": [1, 2],
+                           "q_any_of": [[1, 2], [1, 2], [1, 2]],
+                           "edge_any_of": [0]}}
+
+  Request schema: docs/API.md; per-workload walkthroughs:
+  docs/WORKLOADS.md.
 """
 from __future__ import annotations
 
@@ -66,7 +78,8 @@ def serve(arch_name: str = "gemma2-9b", batch: int = 4, prompt_len: int = 32,
 
 def make_demo_registry():
     """Demo graphs the discovery loop serves out of the box."""
-    from repro.data.synthetic_graphs import (labeled_graph,
+    from repro.data.synthetic_graphs import (attributed_graph,
+                                             labeled_graph,
                                              planted_clique_graph)
     from repro.service import GraphRegistry
 
@@ -75,6 +88,11 @@ def make_demo_registry():
                       planted_clique_graph(n=200, m=1200, clique_size=7,
                                            seed=7))
     registry.register("demo-citeseer", labeled_graph(120, 500, 4, seed=11))
+    # vertex labels AND edge types: the label-predicate demo target
+    # (docs/WORKLOADS.md §labeled variants)
+    registry.register("demo-attributed",
+                      attributed_graph(150, 700, n_labels=5,
+                                       n_edge_labels=2, seed=13))
     return registry
 
 

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.engine import EngineConfig
 from repro.core.graph import GraphStore
+from repro.core.labels import LABEL_FILTERS, LabelPredicate
 
 from .cache import ResultCache
 
@@ -78,6 +79,18 @@ class DiscoveryRequest:
     induced: bool = True                                   # iso semantics
     max_hops: int = 2                                      # iso index depth
     m_edges: Optional[int] = None                          # pattern size
+    # label-constrained discovery (iso / pattern; DESIGN.md §12):
+    # label_predicate is a spec dict with any of `vertex_any_of` (allowed
+    # vertex labels), `q_any_of` (per-query-vertex label classes, iso
+    # only), `edge_any_of` (allowed edge types; needs a graph with edge
+    # labels).  label_filter places the vertex predicate: "pushdown"
+    # folds it into the kernel constraint mask + priority index (default),
+    # "post" filters after candidate materialization (the host-side
+    # baseline).  Complete runs are byte-identical across modes, but
+    # budget-truncated runs are not — so BOTH fields join the result-cache
+    # key (canonicalized), like batch/pool_capacity/shards.
+    label_predicate: Optional[Dict[str, Any]] = None
+    label_filter: str = "pushdown"
     # kernel-path knobs (all workloads; byte-identical results, so both
     # are excluded from the result-cache key — DESIGN.md §10)
     use_pallas: bool = False          # Pallas masked-intersection path
@@ -109,6 +122,8 @@ class DiscoveryRequest:
             for f in ("induced", "use_pallas", "use_cache", "interpret"):
                 if d.get(f) is not None:
                     d[f] = bool(d[f])
+            if d.get("label_filter") is not None:
+                d["label_filter"] = str(d["label_filter"])
             if d.get("weights") is not None:
                 d["weights"] = tuple(int(w) for w in d["weights"])
             if d.get("q_edges") is not None:
@@ -191,7 +206,42 @@ class DiscoveryRequest:
                 raise ValidationError(
                     f"pattern mining requires a labeled graph; "
                     f"{self.graph!r} is unlabeled")
+
+        if self.label_filter not in LABEL_FILTERS:
+            raise ValidationError(
+                f"label_filter must be one of {LABEL_FILTERS}, got "
+                f"{self.label_filter!r}")
+        if self.label_predicate is not None:
+            if self.workload not in ("iso", "pattern"):
+                raise ValidationError(
+                    f"label_predicate applies to iso/pattern only, not "
+                    f"{self.workload!r}")
+            try:
+                pred = LabelPredicate.from_spec(self.label_predicate)
+                if pred is not None:
+                    pred.validate(g, self.workload,
+                                  nq=(len(self.q_labels)
+                                      if self.workload == "iso" else None))
+            except ValueError as e:
+                raise ValidationError(str(e)) from e
         return g
+
+    def predicate(self) -> Optional[LabelPredicate]:
+        """The parsed, canonical :class:`LabelPredicate` (None when the
+        spec is absent or trivial).  Raises ``ValidationError`` on a
+        malformed spec — call after/with :meth:`validate`.
+
+        Parsed once per request (memoized via ``__dict__``, the
+        cached_property idiom — validate, cache keying, engine keying,
+        and compilation all consume the same parse).
+        """
+        if "_pred_cache" not in self.__dict__:
+            try:
+                pred = LabelPredicate.from_spec(self.label_predicate)
+            except ValueError as e:
+                raise ValidationError(str(e)) from e
+            self.__dict__["_pred_cache"] = pred
+        return self.__dict__["_pred_cache"]
 
     # -------------------------------------------------------- canonical form
     def canonical_spec(self) -> Dict[str, Any]:
@@ -208,13 +258,22 @@ class DiscoveryRequest:
         cannot know at lookup time which case a payload is.  Query edges
         are normalized
         to sorted ``(min, max)`` pairs so isomorphic edge orderings of the
-        same query graph key identically.
+        same query graph key identically.  A label predicate enters in
+        its canonical form (sorted, deduplicated label sets) together
+        with ``label_filter`` — pushdown and post are byte-identical only
+        for complete runs, the same reason ``shards`` is keyed; a trivial
+        predicate (absent or empty spec) adds nothing, so constrained and
+        unconstrained requests never collide.
         """
         spec: Dict[str, Any] = dict(
             workload=self.workload, k=self.k, batch=self.batch,
             pool_capacity=self.pool_capacity, shards=self.shards,
             step_budget=self.step_budget,
             candidate_budget=self.candidate_budget)
+        pred = self.predicate()
+        if pred is not None:
+            spec["label_predicate"] = pred.canonical()
+            spec["label_filter"] = self.label_filter
         if self.workload == "weighted-clique":
             spec["weights"] = list(self.weights)
         elif self.workload == "iso":
@@ -262,18 +321,27 @@ class CompiledQuery:
     engine_cfg: Optional[EngineConfig] = None
 
 
-# per-(graph fingerprint, max_hops) iso index cache: building the Fig.-7
-# index is a dense-matmul preprocessing pass, amortized across requests.
-# LRU-bounded so long-lived services that cycle graphs don't leak indexes.
+# per-(graph fingerprint, max_hops, allowed edge types) iso index cache:
+# building the Fig.-7 index is a dense-matmul preprocessing pass,
+# amortized across requests.  Edge-type predicates need an index built on
+# the restricted adjacency (full-graph hop distances would be unsound —
+# see build_iso_index), hence the extra key component; vertex predicates
+# reuse the unrestricted index (restriction happens at bound-assembly
+# time inside make_iso_computation).  LRU-bounded so long-lived services
+# that cycle graphs don't leak indexes.
 _ISO_INDEX_CACHE = ResultCache(capacity=16, ttl_s=float("inf"))
 
 
-def _iso_index(g: GraphStore, max_hops: int) -> np.ndarray:
+def _iso_index(g: GraphStore, max_hops: int,
+               predicate: Optional[LabelPredicate]) -> np.ndarray:
     from repro.core.iso import build_iso_index
-    key = f"{g.fingerprint}:{max_hops}"
+    etypes = (",".join(map(str, predicate.edge_any_of))
+              if predicate is not None and predicate.edge_any_of is not None
+              else "")
+    key = f"{g.fingerprint}:{max_hops}:{etypes}"
     index = _ISO_INDEX_CACHE.get(key)
     if index is None:
-        index = build_iso_index(g, max_hops)
+        index = build_iso_index(g, max_hops, predicate=predicate)
         _ISO_INDEX_CACHE.put(key, index)
     return index
 
@@ -307,10 +375,12 @@ def compile_request(req: DiscoveryRequest, registry: GraphRegistry,
             g, np.asarray(req.weights, np.int32))
     else:  # iso
         from repro.core.iso import make_iso_computation
+        pred = req.predicate()
         comp = make_iso_computation(
             g, list(req.q_edges), list(req.q_labels),
-            _iso_index(g, req.max_hops), induced=req.induced,
-            use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+            _iso_index(g, req.max_hops, pred), induced=req.induced,
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+            predicate=pred, label_filter=req.label_filter)
 
     return CompiledQuery(request=req, graph=g, kind="engine",
                          comp=comp, engine_cfg=cfg)

@@ -113,7 +113,9 @@ class PatternQueryTask:
         # (>=) semantics as EngineQueryTask for every workload
         self.miner = TopKPatternMiner(graph, req.m_edges, req.k,
                                       use_pallas=req.use_pallas,
-                                      interpret=req.interpret)
+                                      interpret=req.interpret,
+                                      predicate=req.predicate(),
+                                      label_filter=req.label_filter)
         self.terminated: Optional[str] = (
             "complete" if self.miner.done else None)
         self._payload: Optional[dict] = None

@@ -1,0 +1,242 @@
+"""Label-constrained discovery (DESIGN.md §12): attributed storage,
+predicate validation, pushdown-vs-host-filter byte parity, cache keying,
+and sharded parity.
+
+Run by the CI ``docs`` job under ``XLA_FLAGS=
+--xla_force_host_platform_device_count=8`` so the in-process sharded
+variants execute on CPU-only runners (kernels auto-detect interpret mode
+there — the parity contract, docs/KERNELS.md).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.aggregate import topk_frequent_patterns
+from repro.core.engine import Engine, EngineConfig
+from repro.core.exhaustive import brute_force_iso
+from repro.core.graph import GraphStore
+from repro.core.iso import build_iso_index, make_iso_computation
+from repro.core.labels import LabelPredicate
+from repro.data.synthetic_graphs import attributed_graph, labeled_graph
+
+NEG = np.iinfo(np.int32).min
+
+
+# ------------------------------------------------------------------- storage
+def test_edge_labels_aligned_and_deduped():
+    edges = np.array([[0, 1], [1, 2], [2, 3], [0, 2], [1, 0], [2, 2]])
+    et = np.array([0, 1, 0, 1, 1, 0])        # dup (1,0) + self-loop dropped
+    g = GraphStore.from_edges(4, edges, labels=np.array([0, 1, 1, 2]),
+                              edge_labels=et)
+    assert g.num_edges == 4 and g.n_edge_labels == 2
+    # each directed CSR slot carries its undirected edge's type (first
+    # occurrence wins on duplicates)
+    want = {(0, 1): 0, (1, 2): 1, (2, 3): 0, (0, 2): 1}
+    for (u, v), lab in zip(g.edge_array, g.edge_labels):
+        assert want[(min(u, v), max(u, v))] == lab
+
+
+def test_etype_planes_partition_adjacency():
+    g = attributed_graph(n=60, m=200, n_labels=4, n_edge_labels=3, seed=2)
+    planes = g.etype_adj_bits
+    assert planes.shape[0] == g.n_edge_labels
+    # OR over all planes is the full adjacency; planes are disjoint
+    assert np.array_equal(np.bitwise_or.reduce(planes, axis=0), g.adj_bits)
+    for t in range(planes.shape[0]):
+        for s in range(t + 1, planes.shape[0]):
+            assert not np.any(planes[t] & planes[s])
+
+
+def test_fingerprint_covers_edge_labels():
+    edges = np.array([[0, 1], [1, 2]])
+    labels = np.array([0, 1, 0])
+    g0 = GraphStore.from_edges(3, edges, labels=labels)
+    g1 = GraphStore.from_edges(3, edges, labels=labels,
+                               edge_labels=np.array([0, 0]))
+    g2 = GraphStore.from_edges(3, edges, labels=labels,
+                               edge_labels=np.array([0, 1]))
+    assert len({g0.fingerprint, g1.fingerprint, g2.fingerprint}) == 3
+
+
+# ----------------------------------------------------------------- predicate
+def test_predicate_canonicalization_and_rejects():
+    p = LabelPredicate.from_spec(
+        {"vertex_any_of": [2, 1, 2], "q_any_of": [[1], [3, 1]]})
+    assert p.vertex_any_of == (1, 2)
+    assert p.q_any_of == ((1,), (1, 3))
+    assert LabelPredicate.from_spec({}) is None
+    assert LabelPredicate.from_spec(None) is None
+    for bad in ({"vertex_any_of": []},
+                {"vertex_any_of": [-1]},
+                {"nope": [1]},
+                {"vertex_any_of": "abc"},
+                [1, 2]):
+        with pytest.raises(ValueError):
+            LabelPredicate.from_spec(bad)
+    g = labeled_graph(20, 40, 3, seed=0)
+    with pytest.raises(ValueError, match="out of range"):
+        LabelPredicate.from_spec({"vertex_any_of": [7]}).validate(g, "iso")
+    with pytest.raises(ValueError, match="edge_labels"):
+        LabelPredicate.from_spec({"edge_any_of": [0]}).validate(g, "iso")
+    with pytest.raises(ValueError, match="iso only"):
+        LabelPredicate.from_spec({"q_any_of": [[0]]}).validate(g, "pattern")
+    with pytest.raises(ValueError, match="3 classes for 2"):
+        LabelPredicate.from_spec(
+            {"q_any_of": [[0], [1], [2]]}).validate(g, "iso", nq=2)
+
+
+# ----------------------------------------------------------- iso label parity
+def _iso_keys(res):
+    return [int(x) for x in res.result_keys if int(x) != NEG]
+
+
+CFG = EngineConfig(k=4, batch=16, pool_capacity=2048, max_steps=50_000)
+
+
+@pytest.mark.parametrize("spec", [
+    {"vertex_any_of": [1, 2]},
+    {"q_any_of": [[1, 2], [1], [0, 1]]},
+    {"vertex_any_of": [0, 1], "q_any_of": [[1, 2], [1], [0, 1]]},
+])
+def test_iso_pushdown_post_parity_and_oracle(spec):
+    g = labeled_graph(n=50, m=160, n_labels=3, seed=7)
+    index = build_iso_index(g, max_hops=2)
+    q_edges, q_labels = [(0, 1), (1, 2)], [1, 1, 1]
+    pred = LabelPredicate.from_spec(spec)
+    runs = {}
+    for lf in ("pushdown", "post"):
+        for pallas in (False, True):
+            comp = make_iso_computation(
+                g, q_edges, q_labels, index, predicate=pred,
+                label_filter=lf, use_pallas=pallas)
+            runs[(lf, pallas)] = Engine(comp, CFG).run()
+    ref = runs[("pushdown", False)]
+    for key, res in runs.items():
+        assert np.array_equal(ref.result_keys, res.result_keys), key
+        assert np.array_equal(ref.result_states, res.result_states), key
+    oracle = brute_force_iso(g, q_edges, q_labels, k=CFG.k, predicate=pred)
+    assert _iso_keys(ref) == [s for s, _ in oracle]
+
+
+def test_iso_edge_predicate_matches_oracle():
+    g = attributed_graph(n=40, m=150, n_labels=2, n_edge_labels=2, seed=9)
+    q_edges, q_labels = [(0, 1), (1, 2)], [0, 1, 0]
+    pred = LabelPredicate.from_spec({"edge_any_of": [0]})
+    # the index must see the same predicate: restricted-adjacency hop
+    # reachability, full-graph degrees (build_iso_index docstring)
+    index = build_iso_index(g, max_hops=2, predicate=pred)
+    res = Engine(make_iso_computation(
+        g, q_edges, q_labels, index, predicate=pred), CFG).run()
+    oracle = brute_force_iso(g, q_edges, q_labels, k=CFG.k, predicate=pred)
+    assert _iso_keys(res) == [s for s, _ in oracle]
+    # and the restriction really binds: the unconstrained run (with its
+    # own unrestricted index) finds at least as much
+    free = Engine(make_iso_computation(
+        g, q_edges, q_labels, build_iso_index(g, max_hops=2)), CFG).run()
+    assert len(_iso_keys(free)) >= len(_iso_keys(res))
+
+
+def test_iso_all_cand_paths_agree_under_predicate():
+    g = labeled_graph(n=40, m=120, n_labels=3, seed=3)
+    index = build_iso_index(g, max_hops=2)
+    pred = LabelPredicate.from_spec({"vertex_any_of": [0, 1]})
+    outs = []
+    for path in ("batched", "vmap", "map"):
+        comp = make_iso_computation(
+            g, [(0, 1), (1, 2), (0, 2)], [1, 1, 1], index,
+            predicate=pred, cand_path=path)
+        outs.append(Engine(comp, CFG).run())
+    for res in outs[1:]:
+        assert np.array_equal(outs[0].result_keys, res.result_keys)
+        assert np.array_equal(outs[0].result_states, res.result_states)
+
+
+# ------------------------------------------------------------- pattern parity
+@pytest.mark.parametrize("pallas", [False, True])
+def test_pattern_pushdown_post_parity(pallas):
+    g = attributed_graph(n=70, m=260, n_labels=4, n_edge_labels=2, seed=5)
+    pred = LabelPredicate.from_spec(
+        {"vertex_any_of": [0, 1, 2], "edge_any_of": [0]})
+    post = topk_frequent_patterns(g, m_edges=2, k=3, predicate=pred,
+                                  label_filter="post", use_pallas=pallas)
+    push = topk_frequent_patterns(g, m_edges=2, k=3, predicate=pred,
+                                  label_filter="pushdown",
+                                  use_pallas=pallas)
+    assert post.patterns == push.patterns
+    assert push.candidates <= post.candidates
+
+
+def test_pattern_edge_predicate_equals_restricted_graph():
+    """Mining with edge_any_of must equal mining the spanning subgraph
+    that keeps only allowed-type edges."""
+    g = attributed_graph(n=60, m=220, n_labels=3, n_edge_labels=2, seed=11)
+    pred = LabelPredicate.from_spec({"edge_any_of": [1]})
+    constrained = topk_frequent_patterns(g, m_edges=2, k=3, predicate=pred)
+    keep = np.asarray(g.edge_labels) == 1
+    sub = GraphStore.from_edges(g.n, g.edge_array[keep], labels=g.labels)
+    plain = topk_frequent_patterns(sub, m_edges=2, k=3)
+    assert constrained.patterns == plain.patterns
+
+
+# ------------------------------------------------------------------- service
+def test_service_label_cache_key_and_validation():
+    from repro.service import DiscoveryRequest, DiscoveryService
+    svc = DiscoveryService()
+    svc.register_graph("g", labeled_graph(40, 120, 3, seed=1))
+    base = dict(graph="g", workload="iso", k=2,
+                q_edges=[[0, 1], [1, 2]], q_labels=[1, 1, 1])
+    spec = dict(base, label_predicate={"vertex_any_of": [1, 2]})
+    r1 = svc.query(DiscoveryRequest.from_dict(spec))
+    assert r1.status == "ok" and not r1.cached
+    # canonical predicate: order/duplicates key identically -> cache hit
+    r2 = svc.query(DiscoveryRequest.from_dict(
+        dict(base, label_predicate={"vertex_any_of": [2, 1, 1]})))
+    assert r2.cached and r2.result_keys == r1.result_keys
+    # label_filter is part of the key (truncated runs are mode-dependent)
+    r3 = svc.query(DiscoveryRequest.from_dict(
+        dict(spec, label_filter="post")))
+    assert not r3.cached and r3.result_keys == r1.result_keys
+    # unconstrained request must not collide with the constrained one
+    r4 = svc.query(DiscoveryRequest.from_dict(base))
+    assert not r4.cached
+    # validation errors surface as error responses
+    for bad in (dict(base, label_predicate={"vertex_any_of": [9]}),
+                dict(base, label_predicate={"bogus": [1]}),
+                dict(base, label_filter="sideways"),
+                dict(base, workload="clique",
+                     label_predicate={"vertex_any_of": [0]})):
+        bad.setdefault("q_edges", base["q_edges"])
+        resp = svc.query(DiscoveryRequest.from_dict(bad))
+        assert resp.status == "error", bad
+
+
+# ------------------------------------------------ in-process (CI docs job)
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs >= 8 devices (CI docs job forces 8 host "
+                           "devices)")
+def test_labeled_iso_parity_sharded():
+    """Labeled top-k is byte-identical across host-filter/pushdown AND
+    across 1/2/8 shards — the §11 parity argument covers the label-
+    constrained computations unchanged (closure-constant masks)."""
+    import dataclasses
+    from repro.distributed import ShardedEngine
+    g = labeled_graph(n=50, m=160, n_labels=3, seed=7)
+    index = build_iso_index(g, max_hops=2)
+    pred = LabelPredicate.from_spec(
+        {"vertex_any_of": [1, 2], "q_any_of": [[1, 2], [1], [1, 2]]})
+    cfg = EngineConfig(k=4, batch=16, pool_capacity=1024, max_steps=50_000)
+    ref = None
+    for lf in ("pushdown", "post"):
+        comp = make_iso_computation(
+            g, [(0, 1), (1, 2), (0, 2)], [1, 1, 1], index,
+            predicate=pred, label_filter=lf)
+        for shards in (1, 2, 8):
+            res = ShardedEngine(
+                comp, dataclasses.replace(cfg, shards=shards)).run()
+            if ref is None:
+                ref = res
+            assert np.array_equal(ref.result_keys, res.result_keys), \
+                (lf, shards)
+            assert np.array_equal(ref.result_states, res.result_states), \
+                (lf, shards)
