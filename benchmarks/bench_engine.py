@@ -1,0 +1,126 @@
+"""Macro-step engine benchmark: host-sync amortization (DESIGN.md §13).
+
+Measures super-steps/sec and wall-clock for ``steps_per_sync`` ∈ {1, 4, 16}
+on the clique and iso workloads, with both VPQ spill backends (``host`` and
+``disk``).  Every fused run is parity-asserted byte-for-byte against the
+unfused (``steps_per_sync=1``) run — macro-stepping is a pure dispatch
+optimization, results never change on complete runs.
+
+The workload shapes are deliberately small: the point of macro-stepping is
+amortizing the *fixed* per-step host cost (jit dispatch, the blocking
+``device_get`` of the stats, overflow ship-out), which dominates exactly
+when the per-step device work is small — the regime the paper's
+single-machine design targets ("a small number of disk seeks" between long
+prioritized-expansion bursts).
+
+    PYTHONPATH=src python -m benchmarks.bench_engine [--fast]
+"""
+import dataclasses
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.clique import make_clique_computation
+from repro.core.engine import Engine, EngineConfig
+from repro.core.iso import build_iso_index, make_iso_computation
+from repro.data.synthetic_graphs import densifying_graph, labeled_graph
+
+_T_SWEEP = (1, 4, 16)
+
+
+def _best_of(rounds, fn):
+    best, out = None, None
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return best, out
+
+
+def _sweep(name, comp, cfg, rounds, tmpdir):
+    """T × spill-backend grid for one workload; parity-asserted vs T=1."""
+    rows = []
+    for backend in ("host", "disk"):
+        bcfg = dataclasses.replace(
+            cfg, spill=backend,
+            spill_dir=tmpdir if backend == "disk" else None)
+        ref = None
+        base_sps = None
+        for T in _T_SWEEP:
+            eng = Engine(comp, dataclasses.replace(bcfg, steps_per_sync=T))
+            eng.run()                         # warm the jit caches
+            wall, res = _best_of(rounds, eng.run)
+            if T == 1:
+                ref = res
+                base_sps = res.steps / wall
+            else:
+                assert np.array_equal(ref.result_keys, res.result_keys), \
+                    f"{name}/{backend}: T={T} result keys diverged"
+                assert np.array_equal(ref.result_states,
+                                      res.result_states), \
+                    f"{name}/{backend}: T={T} result states diverged"
+            sps = res.steps / wall
+            rows.append(dict(
+                workload=name, spill=backend, steps_per_sync=T,
+                wall_s=round(wall, 4), steps=res.steps, syncs=res.syncs,
+                steps_per_sec=round(sps, 1),
+                speedup_vs_T1=round(sps / base_sps, 2),
+                spilled=res.spilled, refilled=res.refilled,
+                late_pruned=res.late_pruned))
+    return rows
+
+
+def run(fast: bool = False, rounds: int = 3, tmpdir=None):
+    own_tmp = tmpdir is None
+    if own_tmp:
+        tmp = tempfile.TemporaryDirectory(prefix="bench_engine_")
+        tmpdir = tmp.name
+    try:
+        rows = []
+        # clique: dense graph + tiny batch/pool -> a long prioritized run
+        # (hundreds of super-steps) with real spill/refill traffic, where
+        # per-step device work is far below the per-sync host cost
+        m = 1200 if fast else 1600
+        g = densifying_graph(96, m, seed=0)
+        rows += _sweep(
+            "clique", make_clique_computation(g),
+            EngineConfig(k=3, batch=4, pool_capacity=128, max_steps=200_000),
+            rounds, tmpdir)
+        # iso: triangle query over a labeled graph, pool tight enough that
+        # the seed frontier spills and late pruning triggers on refill
+        gl = labeled_graph(n=64 if fast else 80, m=300 if fast else 480,
+                           n_labels=3, seed=5)
+        comp = make_iso_computation(
+            gl, [(0, 1), (1, 2), (0, 2)], [1, 1, 1],
+            build_iso_index(gl, max_hops=2))
+        rows += _sweep(
+            "iso", comp,
+            EngineConfig(k=3, batch=4, pool_capacity=32, max_steps=200_000),
+            rounds, tmpdir)
+        return rows
+    finally:
+        if own_tmp:
+            tmp.cleanup()
+
+
+def main(fast: bool = False):
+    rows = run(fast=fast)
+    print("(top-k parity vs steps_per_sync=1 asserted on every row)")
+    print(f"{'workload':>8} {'spill':>5} {'T':>3} {'steps':>6} {'syncs':>6} "
+          f"{'wall s':>8} {'steps/s':>9} {'vs T=1':>7} {'spilled':>8} "
+          f"{'late_pr':>8}")
+    for r in rows:
+        print(f"{r['workload']:>8} {r['spill']:>5} {r['steps_per_sync']:>3} "
+              f"{r['steps']:>6} {r['syncs']:>6} {r['wall_s']:>8.3f} "
+              f"{r['steps_per_sec']:>9.1f} {r['speedup_vs_T1']:>6.2f}x "
+              f"{r['spilled']:>8} {r['late_pruned']:>8}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    main(fast=ap.parse_args().fast)

@@ -11,8 +11,8 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import bench_clique, bench_distributed, bench_iso, \
-    bench_k, bench_labeled, bench_pattern, bench_service, \
+from benchmarks import bench_clique, bench_distributed, bench_engine, \
+    bench_iso, bench_k, bench_labeled, bench_pattern, bench_service, \
     bench_vpq  # noqa: E402
 
 
@@ -22,7 +22,7 @@ def main():
     ap.add_argument("--out", default="artifacts/bench")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write per-benchmark wall-clock timings + "
-                         "result rows to PATH (e.g. BENCH_PR4.json) — the "
+                         "result rows to PATH (e.g. BENCH_PR5.json) — the "
                          "perf-trajectory artifact CI uploads")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
@@ -35,7 +35,8 @@ def main():
                       ("vpq (Fig 19)", bench_vpq),
                       ("service (§9)", bench_service),
                       ("distributed (§11)", bench_distributed),
-                      ("labeled (§12)", bench_labeled)]:
+                      ("labeled (§12)", bench_labeled),
+                      ("engine macro-step (§13)", bench_engine)]:
         print(f"\n=== {name} ===")
         t0 = time.time()
         results[name] = mod.main(fast=args.fast)

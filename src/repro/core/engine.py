@@ -25,6 +25,18 @@ super-step body (``_step_impl``) takes an optional ``bound_sync`` hook, so
 :class:`repro.distributed.ShardedEngine` runs the identical code per shard
 inside ``shard_map`` — the single-device :class:`Engine` is exactly the
 1-shard specialization (DESIGN.md §11).
+
+Macro-stepping (DESIGN.md §13): with ``EngineConfig.steps_per_sync = T > 1``
+the engine fuses up to ``T`` super-steps into one jitted
+``jax.lax.while_loop`` over ``_step_impl`` (``_macro_impl``), accumulating
+stats and overflow in a fixed-capacity on-device buffer, so the host↔device
+round-trip — ``device_get`` of the stats, Python dispatch, the overflow
+ship-out — is paid once per *macro*-step instead of once per super-step.
+The loop early-exits back to the host exactly when host work is due: the
+pool dips under the ``C/2`` refill watermark while spill exists, the
+overflow accumulator cannot fit another block, or the pool drains.  The
+macro jit donates the pool buffers on backends that support donation, so
+the ``C×S`` pool is updated in place instead of copied every step.
 """
 from __future__ import annotations
 
@@ -38,6 +50,18 @@ import jax.numpy as jnp
 
 from .api import NEG, SubgraphComputation
 from .vpq import VirtualPriorityQueue
+
+
+def donatable_pool_argnums():
+    """Pool-buffer argnums the macro-step jit may donate (DESIGN.md §13).
+
+    The pool arrays (args 0-2: ``pool_states``/``pool_prio``/``pool_ub``,
+    ``C×S`` + 2×``C``) are pure state-in/state-out, so donation lets XLA
+    update them in place instead of copying every macro-step.  CPU has no
+    donation support (XLA warns and copies anyway), so donate only where
+    it is implemented.
+    """
+    return (0, 1, 2) if jax.default_backend() in ("gpu", "tpu") else ()
 
 
 @dataclasses.dataclass
@@ -58,6 +82,22 @@ class EngineConfig:
     # unlike the per-step-identical kernel knobs below — it enters the
     # service result-cache key.
     shards: int = 1
+    # macro-stepping (DESIGN.md §13): number of super-steps fused into one
+    # jitted while_loop between host syncs.  1 (default) preserves the
+    # classic one-jit-call-per-step behavior; T > 1 amortizes dispatch /
+    # device_get latency over T steps.  Complete runs are byte-identical
+    # for any T (parity-tested) — like the kernel knobs, and unlike
+    # batch/pool_capacity, it is excluded from the service result-cache
+    # key; budget-truncated runs stop at the same step count for any T
+    # (the macro loop is capped to the remaining budget) but may differ
+    # in spill-run tie order.
+    steps_per_sync: int = 1
+    # capacity (entries) of the on-device overflow accumulator used by the
+    # fused loop; None sizes it to steps_per_sync * (B + M) — enough that
+    # it can never fill mid-macro-step.  Smaller values trade memory for
+    # earlier syncs (the loop exits when the next block might not fit);
+    # values below B + M are raised to B + M.
+    overflow_accum: Optional[int] = None
     # kernel-path knobs (DESIGN.md §10): a declarative record consumed at
     # computation-construction time (service.api.compile_request reads
     # them when calling make_*_computation) — NOT by the engine loop,
@@ -81,6 +121,8 @@ class EngineResult:
     spilled: int
     refilled: int
     rebalanced: int = 0           # spilled entries moved across shards (§11)
+    late_pruned: int = 0          # dominated entries dropped at VPQ refill
+    syncs: int = 0                # host↔device round-trips (== steps at T=1)
     per_shard: Optional[dict] = None  # ShardedEngine: per-shard stat lists
 
 
@@ -105,6 +147,7 @@ class EngineState:
     expanded: int = 0
     pruned: int = 0
     refilled: int = 0
+    syncs: int = 0                # host↔device round-trips taken so far
     threshold: int = int(NEG)
     pool_occupancy: int = 0
     done: bool = False            # pool and VPQ both drained
@@ -159,8 +202,17 @@ class Engine:
         self.C = config.pool_capacity
         self.S = comp.state_width
         self.k = config.k
+        self.T = max(1, config.steps_per_sync)
+        # overflow-accumulator capacity: one super-step's overflow block is
+        # exactly B + M entries (the merge-sort insert over C + M + B rows
+        # keeps C), so T blocks can never overflow the default sizing
+        self.acc_cap = max(config.overflow_accum or self.T * (self.B + self.M),
+                           self.B + self.M)
         self._step = jax.jit(self._step_impl)
         self._insert = jax.jit(self._insert_impl)
+        if self.T > 1:
+            self._macro = jax.jit(self._macro_impl,
+                                  donate_argnums=donatable_pool_argnums())
 
     # ------------------------------------------------------------------ step
     def _step_impl(self, pool_states, pool_prio, pool_ub,
@@ -243,6 +295,90 @@ class Engine:
         return (pool_states, pool_prio, pool_ub, result_states, result_keys,
                 overflow, stats)
 
+    # ------------------------------------------------------------ macro-step
+    def _macro_impl(self, pool_states, pool_prio, pool_ub,
+                    result_states, result_keys, t_max, vpq_nonempty, occ0,
+                    bound_sync=None, any_reduce=None):
+        """Up to ``t_max`` fused super-steps in one ``lax.while_loop``
+        (DESIGN.md §13).  Per-step overflow blocks land in a fixed
+        ``[acc_cap, S]`` on-device accumulator — each block is written at
+        the valid-entry watermark ``w`` and, because blocks exit the
+        merge-sort insert sorted by descending priority, their valid
+        entries are a prefix, so advancing ``w`` by the valid count packs
+        the accumulator densely and the host ships exactly ``acc[:w]``.
+
+        The loop hands control back to the host exactly when host work is
+        due, i.e. it continues only while (a) steps remain, (b) the next
+        overflow block is guaranteed to fit, (c) the pool is non-empty,
+        and (d) no refill is possible — the pool is at or above the
+        ``C//2`` watermark, or nothing is spilled (VPQ empty at entry and
+        accumulator empty).  (d) reproduces the unfused refill cadence
+        step-for-step: the fused engine syncs at the first step whose
+        unfused counterpart would have refilled.
+
+        ``bound_sync`` / ``any_reduce`` are the sharded engine's hooks:
+        the first is the §4 threshold collective run *every inner step*
+        (pruning tightness is unchanged by fusion), the second reduces
+        per-shard continue/stop votes to a global decision so all shards
+        leave the loop together and the in-loop collective stays aligned.
+        The continue flag is computed in the loop *body* and carried, so
+        the ``while_loop`` cond stays collective-free.
+        """
+        C, S, cap = self.C, self.S, self.acc_cap
+        blk = self.B + self.M
+
+        def cont_flag(t_next, w, occ):
+            room = (w + blk) <= cap
+            active = occ > 0
+            low = occ < (C // 2)
+            refillable = vpq_nonempty | (w > 0)
+            if any_reduce is None:
+                need_host = jnp.logical_not(room) | (low & refillable)
+                cont = jnp.logical_not(need_host) & active
+            else:
+                # per-shard votes -> one global decision: stop when ANY
+                # shard needs host service (its own refill moment or a
+                # full accumulator), keep going while ANY shard is active;
+                # refill-ability is global because the host rebalancer can
+                # move any shard's spill to any starving shard
+                need_host = jnp.logical_not(room) | \
+                    (low & any_reduce(refillable))
+                cont = jnp.logical_not(any_reduce(need_host)) & \
+                    any_reduce(active)
+            return (t_next < t_max) & cont
+
+        def body(carry):
+            (t, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums, _occ,
+             _thr, _cont) = carry
+            ps, pp, pu, rs, rk, (o_s, o_p, o_u), stats = self._step_impl(
+                ps, pp, pu, rs, rk, bound_sync=bound_sync)
+            cnt = jnp.sum(o_p > NEG).astype(jnp.int32)
+            acc_s = jax.lax.dynamic_update_slice(acc_s, o_s, (w, 0))
+            acc_p = jax.lax.dynamic_update_slice(acc_p, o_p, (w,))
+            acc_u = jax.lax.dynamic_update_slice(acc_u, o_u, (w,))
+            w = w + cnt
+            sums = {name: sums[name] + stats[name]
+                    for name in ("expanded", "created", "pruned")}
+            occ = stats["pool_occupancy"]
+            return (t + 1, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w,
+                    sums, occ, stats["threshold"],
+                    cont_flag(t + 1, w, occ))
+
+        zero = jnp.int32(0)
+        carry = (zero, pool_states, pool_prio, pool_ub,
+                 result_states, result_keys,
+                 jnp.zeros((cap, S), jnp.int32),
+                 jnp.full((cap,), NEG, jnp.int32),
+                 jnp.full((cap,), NEG, jnp.int32),
+                 zero, dict(expanded=zero, created=zero, pruned=zero),
+                 jnp.asarray(occ0, jnp.int32), jnp.int32(NEG),
+                 jnp.asarray(True))  # the first inner step always runs
+        (t, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums, occ, thr,
+         _cont) = jax.lax.while_loop(lambda c: c[-1], body, carry)
+        stats = dict(sums, steps=t, spill_count=w, pool_occupancy=occ,
+                     threshold=thr)
+        return ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, stats
+
     # ---------------------------------------------------------------- insert
     def _insert_impl(self, pool_states, pool_prio, pool_ub,
                      new_states, new_prio, new_ub):
@@ -289,22 +425,58 @@ class Engine:
             vpq=vpq, candidates=int(n0), pool_occupancy=min(int(n0), C))
 
     # ------------------------------------------------------------------ step
-    def step(self, st: EngineState) -> EngineState:
-        """Advance one super-step; updates ``st`` in place and returns it."""
-        C = self.C
+    def step(self, st: EngineState, max_inner: Optional[int] = None
+             ) -> EngineState:
+        """Advance one engine step — a single super-step at
+        ``steps_per_sync == 1``, else one fused *macro*-step of up to
+        ``min(steps_per_sync, max_inner)`` super-steps (DESIGN.md §13).
+        ``max_inner`` caps the fused super-step count so external step
+        budgets (``max_steps``, the service ``step_budget``) truncate at
+        exactly the same step count for any ``steps_per_sync``.  Updates
+        ``st`` in place and returns it.
+        """
+        if self.T == 1:
+            (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
+             st.result_keys, overflow, stats) = self._step(
+                st.pool_states, st.pool_prio, st.pool_ub,
+                st.result_states, st.result_keys)
+            stats = jax.tree.map(int, jax.device_get(stats))
+            st.steps += 1
+            st.syncs += 1
+            st.expanded += stats["expanded"]
+            st.candidates += stats["created"]
+            st.pruned += stats["pruned"]
+            st.threshold = stats["threshold"]
+            st.vpq.maybe_push(*map(np.asarray, overflow))
+            self._refill(st, stats["pool_occupancy"])
+            return st
+
+        t_cap = (self.T if max_inner is None
+                 else max(1, min(self.T, int(max_inner))))
         (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
-         st.result_keys, overflow, stats) = self._step(
+         st.result_keys, acc_s, acc_p, acc_u, stats) = self._macro(
             st.pool_states, st.pool_prio, st.pool_ub,
-            st.result_states, st.result_keys)
+            st.result_states, st.result_keys,
+            np.int32(t_cap), len(st.vpq) > 0, np.int32(st.pool_occupancy))
         stats = jax.tree.map(int, jax.device_get(stats))
-        st.steps += 1
+        st.steps += stats["steps"]
+        st.syncs += 1
         st.expanded += stats["expanded"]
         st.candidates += stats["created"]
         st.pruned += stats["pruned"]
         st.threshold = stats["threshold"]
-        st.vpq.maybe_push(*map(np.asarray, overflow))
+        w = stats["spill_count"]
+        if w:   # ship only the accumulator's valid prefix; nothing when dry
+            st.vpq.maybe_push(np.asarray(acc_s)[:w], np.asarray(acc_p)[:w],
+                              np.asarray(acc_u)[:w])
+        self._refill(st, stats["pool_occupancy"])
+        return st
 
-        occ = stats["pool_occupancy"]
+    # ---------------------------------------------------------------- refill
+    def _refill(self, st: EngineState, occ: int) -> None:
+        """Refill the pool from spill when under the C/2 watermark; sets
+        ``pool_occupancy`` and ``done``."""
+        C = self.C
         refilled_now = 0
         if occ < C // 2 and len(st.vpq):
             # refill from spill runs; entries dominated by the current
@@ -325,7 +497,6 @@ class Engine:
         # so a refill that drained the VPQ must not read as completion
         st.pool_occupancy = occ + refilled_now
         st.done = st.pool_occupancy == 0 and len(st.vpq) == 0
-        return st
 
     # -------------------------------------------------------------- finalize
     def finalize(self, st: EngineState) -> EngineResult:
@@ -336,13 +507,14 @@ class Engine:
             result_keys=np.asarray(st.result_keys),
             steps=st.steps, candidates=st.candidates, expanded=st.expanded,
             pruned=st.pruned, spilled=st.vpq.total_spilled,
-            refilled=st.refilled)
+            refilled=st.refilled, late_pruned=st.vpq.total_late_pruned,
+            syncs=st.syncs)
 
     # ------------------------------------------------------------------- run
     def run(self, progress_every: int = 0) -> EngineResult:
         st = self.start()
         while not st.done and st.steps < self.cfg.max_steps:
-            self.step(st)
+            self.step(st, max_inner=self.cfg.max_steps - st.steps)
             if progress_every and st.steps % progress_every == 0:
                 print(f"[{self.comp.name}] step={st.steps} "
                       f"occ={st.pool_occupancy} vpq={len(st.vpq)} "

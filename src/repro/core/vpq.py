@@ -8,8 +8,14 @@ block and are spilled here as **sorted runs** — exactly the paper's design:
   disk in order of decreasing priority");
 * dequeue/refill performs a **buffered k-way merge** over run heads
   (external-merge-sort style, "a small number of disk seeks"):
-  each run keeps an in-memory block buffer; a heap over buffer heads yields
-  the globally highest entries.
+  each run keeps an in-memory block buffer; a blockwise merge over the
+  buffers yields the globally highest entries.  The merge is vectorized
+  (DESIGN.md §13): instead of one heap pop per entry, every live run's
+  buffered block is pulled at once, concatenated, and stably argsorted by
+  descending priority; the *safe prefix* — entries no unbuffered tail can
+  outrank — is consumed in bulk and per-run cursors advance by block.  The
+  emitted order is byte-identical to the entry-at-a-time heap merge
+  (priority descending, ties by run index then within-run position).
 
 Backends: ``host`` (numpy arrays in host DRAM — the HBM:DRAM ratio on a TPU
 host mirrors the paper's DRAM:disk ratio) and ``disk`` (memory-mapped ``.npy``
@@ -18,11 +24,13 @@ runs with block reads — the literal reproduction used by
 
 Refill also applies **late dominance pruning**: entries whose stored upper
 bound has fallen below the current k-th-result threshold are dropped during
-the merge instead of being shipped back to the device.
+the merge instead of being shipped back to the device; drops are counted in
+:attr:`VirtualPriorityQueue.total_late_pruned` so pruning effectiveness
+(a paper metric) is auditable end to end (``EngineResult.late_pruned``,
+service response ``stats``).
 """
 from __future__ import annotations
 
-import heapq
 import os
 import shutil
 import tempfile
@@ -76,6 +84,32 @@ class _Run:
             self._fill_buffer()
         return out
 
+    # ------------------------------------------------- blockwise merge API
+    def buffered(self):
+        """The not-yet-consumed slice of the current buffer block
+        (states, prio, ub) — sorted in decreasing priority like the run."""
+        i = self.cursor - self._buf_start
+        return self._bstates[i:], self._bprio[i:], self._bub[i:]
+
+    @property
+    def has_unbuffered(self) -> bool:
+        """True when entries exist beyond the current buffer block."""
+        return self._buf_start + len(self._bprio) < self.n
+
+    @property
+    def tail_prio(self) -> int:
+        """Priority of the last (smallest) buffered entry — an upper bound
+        on every unbuffered entry of this run (the run is sorted)."""
+        return int(self._bprio[-1])
+
+    def consume(self, c: int):
+        """Advance the cursor by ``c`` consumed entries; refill the buffer
+        with the next sequential block when the current one is spent."""
+        self.cursor += c
+        if self.cursor < self.n and self.cursor - self._buf_start >= \
+                len(self._bprio):
+            self._fill_buffer()
+
     @property
     def exhausted(self) -> bool:
         return self.cursor >= self.n
@@ -104,6 +138,7 @@ class VirtualPriorityQueue:
         self._pending_n = 0
         self._run_id = 0
         self.total_spilled = 0
+        self.total_late_pruned = 0        # dominated entries dropped on refill
         self._own_dir = spill_dir is None and backend == "disk"
         self.spill_dir = (tempfile.mkdtemp(prefix="nuri_vpq_")
                           if self._own_dir else spill_dir)
@@ -146,37 +181,96 @@ class VirtualPriorityQueue:
 
     # ------------------------------------------------------------------- pop
     def pop_chunk(self, n: int, min_ub: int = NEG):
-        """Return the globally top-``n`` spilled entries (k-way run merge),
-        dropping entries whose upper bound is dominated by ``min_ub``."""
+        """Return the globally top-``n`` surviving spilled entries
+        (blockwise k-way run merge), dropping — and counting in
+        ``total_late_pruned`` — entries whose upper bound is dominated by
+        ``min_ub``.
+
+        Vectorized merge: each round concatenates every live run's buffered
+        block and stably argsorts by descending priority, so the global
+        order is (priority desc, run index asc, within-run position asc) —
+        exactly the order an entry-at-a-time heap merge with run-index
+        tie-break produces.  An entry is *safe* to emit when no run's
+        unbuffered tail could outrank it: with ``bar`` the largest buffered
+        tail among runs that still have unbuffered data and ``rmin`` the
+        smallest such run index at ``bar``, the safe region is
+        ``prio > bar`` plus ``prio == bar`` from runs ``<= rmin`` (ties
+        resolve by run index, and unbuffered entries of run ``r`` sort
+        after its buffered ones).  That region is a prefix of the merged
+        order and always contains the ``bar`` run's own buffered block, so
+        every round either emits entries or exhausts a run — no per-entry
+        Python loop, cursors advance in bulk.
+
+        Consumption stops as soon as ``n`` entries survive pruning, leaving
+        later entries (dominated or not) in their runs.
+        """
         self._flush_pending()
-        heap = []
-        for i, r in enumerate(self.runs):
-            if not r.exhausted:
-                heapq.heappush(heap, (-r.head_prio(), i))
         out_s, out_p, out_u = [], [], []
-        while heap and len(out_p) < n:
-            _, i = heapq.heappop(heap)
-            state, p, u = self.runs[i].pop()
-            if u >= min_ub:                      # late dominance pruning
-                out_s.append(state)
-                out_p.append(p)
-                out_u.append(u)
-            if not self.runs[i].exhausted:
-                heapq.heappush(heap, (-self.runs[i].head_prio(), i))
+        need = n
+        live = [r for r in self.runs if not r.exhausted]
+        while need > 0 and live:
+            blocks = [r.buffered() for r in live]
+            prio = np.concatenate([b[1] for b in blocks]).astype(np.int64)
+            run_of = np.concatenate(
+                [np.full(len(b[1]), j, np.int64)
+                 for j, b in enumerate(blocks)])
+            order = np.argsort(-prio, kind="stable")
+
+            bar, rmin = None, None
+            for j, r in enumerate(live):
+                if r.has_unbuffered:
+                    t = r.tail_prio
+                    if bar is None or t > bar:
+                        bar, rmin = t, j
+            if bar is None:
+                n_safe = len(order)
+            else:
+                p_sorted = prio[order]
+                safe = (p_sorted > bar) | ((p_sorted == bar)
+                                           & (run_of[order] <= rmin))
+                # monotone prefix of the merged order; never empty — the
+                # bar run's own buffered block is entirely inside it
+                n_safe = int(np.searchsorted(~safe, True))
+            take = order[:n_safe]
+
+            ub = np.concatenate([b[2] for b in blocks])
+            keep = ub[take] >= min_ub            # late dominance pruning
+            cum = np.cumsum(keep)
+            kept_total = int(cum[-1]) if n_safe else 0
+            if kept_total >= need:               # stop at the need-th keeper
+                stop = int(np.searchsorted(cum, need)) + 1
+            else:
+                stop = n_safe
+            sel = take[:stop]
+            kmask = keep[:stop]
+            kept = sel[kmask]
+            self.total_late_pruned += int(stop - kmask.sum())
+
+            if len(kept):
+                states = np.concatenate([b[0] for b in blocks])
+                out_s.append(states[kept])
+                out_p.append(prio[kept].astype(np.int32))
+                out_u.append(ub[kept])
+                need -= len(kept)
+            for j, c in enumerate(np.bincount(run_of[sel],
+                                              minlength=len(live))):
+                if c:
+                    live[j].consume(int(c))
+            live = [r for r in live if not r.exhausted]
         # close exhausted runs as they drop out so the disk backend's .npy
         # run files are deleted immediately instead of leaking until close()
-        live = []
+        keep_runs = []
         for r in self.runs:
             if r.exhausted:
                 r.close()
             else:
-                live.append(r)
-        self.runs = live
+                keep_runs.append(r)
+        self.runs = keep_runs
         if not out_p:
             return (np.zeros((0, self.state_width), np.int32),
                     np.zeros((0,), np.int32), np.zeros((0,), np.int32))
-        return (np.stack(out_s).astype(np.int32),
-                np.asarray(out_p, np.int32), np.asarray(out_u, np.int32))
+        return (np.concatenate(out_s).astype(np.int32),
+                np.concatenate(out_p), np.concatenate(out_u).astype(np.int32))
 
     def close(self):
         for r in self.runs:

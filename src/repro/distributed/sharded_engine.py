@@ -41,6 +41,18 @@ Host/device division follows the repo-wide rule (DESIGN.md §2): the jitted
 shard_map owns every fixed-shape loop; the host only moves overflow /
 refill / rebalance blocks and accumulates counters.
 
+Macro-stepping (DESIGN.md §13) composes with sharding: under
+``EngineConfig.steps_per_sync = T > 1`` the fused ``while_loop`` of
+:meth:`repro.core.engine.Engine._macro_impl` runs *per shard inside one
+shard_map*, with the §4 ``bound_sync`` collective exchanged every inner
+step — pruning tightness is unchanged by fusion — and the per-shard
+continue/stop votes reduced to one global decision (``psum``) so every
+shard leaves the loop together and the in-loop collectives stay aligned.
+The loop returns to the host as soon as *any* shard hits its refill
+watermark (with spill available anywhere — the rebalancer can move it),
+fills its overflow accumulator, or the fleet drains, so refill and
+rebalance cadence match the unfused engine.
+
 Label-constrained computations (DESIGN.md §12) thread through unchanged:
 the predicate's bitsets — class rows, allowed-vertex mask, restricted
 adjacency — are closure constants of ``score_children``, replicated to
@@ -61,6 +73,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.api import NEG, SubgraphComputation
 from repro.core.engine import (Engine, EngineConfig, EngineResult,
+                               donatable_pool_argnums,
                                make_sharded_bound_sync, merge_topk)
 from repro.core.vpq import VirtualPriorityQueue
 
@@ -83,6 +96,8 @@ def shard_map_compat(f, mesh, in_specs, out_specs):
 
 _STAT_KEYS = ("dequeued", "expanded", "created", "pruned",
               "pool_occupancy", "threshold")
+_MACRO_STAT_KEYS = ("expanded", "created", "pruned", "pool_occupancy",
+                    "threshold", "spill_count", "steps")
 
 
 @dataclasses.dataclass
@@ -107,6 +122,7 @@ class ShardedEngineState:
     pruned: int = 0
     refilled: int = 0
     rebalanced: int = 0
+    syncs: int = 0                # host↔device round-trips taken so far
     threshold: int = int(NEG)
     done: bool = False            # every shard pool and VPQ drained
 
@@ -164,6 +180,34 @@ class ShardedEngine:
             self._eng._insert_impl, mesh=self.mesh, in_specs=(spec,) * 6,
             out_specs=(spec,) * 6))
 
+        # fused macro-step (DESIGN.md §13): the per-shard while_loop with
+        # the §4 threshold collective every inner step and the per-shard
+        # continue/stop votes psum-reduced so all shards exit together
+        self.T = self._eng.T
+        if self.T > 1:
+            def any_reduce(flag):
+                return jax.lax.psum(flag.astype(jnp.int32), "data") > 0
+
+            def macro_body(pool_states, pool_prio, pool_ub,
+                           result_states, result_keys, t_max, vpq_flag,
+                           occ0):
+                (ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, stats) = \
+                    self._eng._macro_impl(
+                        pool_states, pool_prio, pool_ub,
+                        result_states, result_keys, t_max,
+                        vpq_flag[0], occ0[0],
+                        bound_sync=sync, any_reduce=any_reduce)
+                stats = {name: stats[name].reshape(1)
+                         for name in _MACRO_STAT_KEYS}
+                return ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, stats
+
+            self._macro_sharded = jax.jit(shard_map_compat(
+                macro_body, mesh=self.mesh,
+                in_specs=(spec,) * 5 + (P(), spec, spec),
+                out_specs=((spec,) * 8 +
+                           ({name: spec for name in _MACRO_STAT_KEYS},))),
+                donate_argnums=donatable_pool_argnums())
+
     # ----------------------------------------------------------------- start
     def start(self) -> ShardedEngineState:
         """Seed-partition the frontier and return a resumable state."""
@@ -204,28 +248,70 @@ class ShardedEngine:
             vpqs=vpqs, pool_occupancy=occ, candidates=int(n0))
 
     # ------------------------------------------------------------------ step
-    def step(self, st: ShardedEngineState) -> ShardedEngineState:
-        """Advance every shard one super-step; spill, refill, rebalance."""
-        shards, C, S = self.shards, self.C, self.S
-        (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
-         st.result_keys, overflow, stats) = self._step_sharded(
-            st.pool_states, st.pool_prio, st.pool_ub,
-            st.result_states, st.result_keys)
-        stats = jax.device_get(stats)             # each value: [shards]
-        o_s, o_p, o_u = (np.asarray(a) for a in overflow)
-        o_per = len(o_p) // shards
+    def step(self, st: ShardedEngineState,
+             max_inner: Optional[int] = None) -> ShardedEngineState:
+        """Advance every shard one (macro-)step; spill, refill, rebalance.
 
-        st.steps += 1
+        ``max_inner`` caps the fused super-step count exactly like
+        :meth:`repro.core.engine.Engine.step` so step budgets truncate at
+        the same count for any ``steps_per_sync``.
+        """
+        shards, cap = self.shards, self._eng.acc_cap
+        if self.T == 1:
+            (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
+             st.result_keys, overflow, stats) = self._step_sharded(
+                st.pool_states, st.pool_prio, st.pool_ub,
+                st.result_states, st.result_keys)
+            stats = jax.device_get(stats)         # each value: [shards]
+            o_s, o_p, o_u = (np.asarray(a) for a in overflow)
+            o_per = len(o_p) // shards
+
+            st.steps += 1
+            st.syncs += 1
+            st.expanded += int(stats["expanded"].sum())
+            st.candidates += int(stats["created"].sum())
+            st.pruned += int(stats["pruned"].sum())
+            st.threshold = int(stats["threshold"][0])  # replicated, §4 sync
+            occ = stats["pool_occupancy"].astype(np.int64)
+
+            for i in range(shards):
+                sl = slice(i * o_per, (i + 1) * o_per)
+                st.vpqs[i].maybe_push(o_s[sl], o_p[sl], o_u[sl])
+            return self._refill_rebalance(st, occ)
+
+        t_cap = (self.T if max_inner is None
+                 else max(1, min(self.T, int(max_inner))))
+        (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
+         st.result_keys, acc_s, acc_p, acc_u, stats) = self._macro_sharded(
+            st.pool_states, st.pool_prio, st.pool_ub,
+            st.result_states, st.result_keys, np.int32(t_cap),
+            np.asarray([len(v) > 0 for v in st.vpqs]),
+            st.pool_occupancy.astype(np.int32))
+        stats = jax.device_get(stats)             # each value: [shards]
+        st.steps += int(stats["steps"][0])        # uniform: global exit vote
+        st.syncs += 1
         st.expanded += int(stats["expanded"].sum())
         st.candidates += int(stats["created"].sum())
         st.pruned += int(stats["pruned"].sum())
-        st.threshold = int(stats["threshold"][0])   # replicated by the sync
+        st.threshold = int(stats["threshold"][0])
         occ = stats["pool_occupancy"].astype(np.int64)
+        spill = stats["spill_count"]
+        if spill.any():   # ship only each shard's valid accumulator prefix
+            acc_s, acc_p, acc_u = (np.asarray(a)
+                                   for a in (acc_s, acc_p, acc_u))
+            for i in range(shards):
+                w = int(spill[i])
+                if w:
+                    base = i * cap
+                    st.vpqs[i].maybe_push(acc_s[base:base + w],
+                                          acc_p[base:base + w],
+                                          acc_u[base:base + w])
+        return self._refill_rebalance(st, occ)
 
-        for i in range(shards):
-            sl = slice(i * o_per, (i + 1) * o_per)
-            st.vpqs[i].maybe_push(o_s[sl], o_p[sl], o_u[sl])
-
+    # ----------------------------------------------------- refill/rebalance
+    def _refill_rebalance(self, st: ShardedEngineState,
+                          occ: np.ndarray) -> ShardedEngineState:
+        shards, C, S = self.shards, self.C, self.S
         # ---- refill: per shard, below the C/2 watermark, from its own VPQ
         blk_s = np.zeros((shards, C, S), np.int32)
         blk_p = np.full((shards, C), NEG, np.int32)
@@ -293,6 +379,7 @@ class ShardedEngine:
             st.result_states, st.result_keys, self.k)
         per_shard = dict(
             spilled=[int(v.total_spilled) for v in st.vpqs],
+            late_pruned=[int(v.total_late_pruned) for v in st.vpqs],
             vpq_backlog=[len(v) for v in st.vpqs],
             pool_occupancy=[int(x) for x in st.pool_occupancy])
         for v in st.vpqs:
@@ -303,13 +390,15 @@ class ShardedEngine:
             steps=st.steps, candidates=st.candidates, expanded=st.expanded,
             pruned=st.pruned,
             spilled=sum(per_shard["spilled"]), refilled=st.refilled,
-            rebalanced=st.rebalanced, per_shard=per_shard)
+            rebalanced=st.rebalanced,
+            late_pruned=sum(per_shard["late_pruned"]), syncs=st.syncs,
+            per_shard=per_shard)
 
     # ------------------------------------------------------------------- run
     def run(self, progress_every: int = 0) -> EngineResult:
         st = self.start()
         while not st.done and st.steps < self.cfg.max_steps:
-            self.step(st)
+            self.step(st, max_inner=self.cfg.max_steps - st.steps)
             if progress_every and st.steps % progress_every == 0:
                 print(f"[{self.comp.name}/x{self.shards}] step={st.steps} "
                       f"occ={st.pool_occupancy.tolist()} "

@@ -95,6 +95,18 @@ class DiscoveryRequest:
     # are excluded from the result-cache key — DESIGN.md §10)
     use_pallas: bool = False          # Pallas masked-intersection path
     interpret: Optional[bool] = None  # None = auto-detect backend
+    # macro-stepping (engine workloads; DESIGN.md §13): number of engine
+    # super-steps fused into one jitted device loop per host sync.
+    # Complete runs are byte-identical for any value (parity-tested), and
+    # step_budget truncation lands on the same step count for any value
+    # (the fused loop is capped to the remaining budget) — so like
+    # use_pallas/interpret it is EXCLUDED from the result-cache key.
+    # Truncated-run caveats (documented in docs/API.md): candidate_budget
+    # is still checked between host syncs, so a fused run can overshoot
+    # it by up to T-1 super-steps of candidates, and a truncated run's
+    # partial answer can differ across values in spill tie-order.
+    # Ignored by `pattern` (host-side aggregate model, no engine loop).
+    steps_per_sync: int = 1
     # device-mesh sharding (engine workloads; DESIGN.md §11).  shards > 1
     # runs the query on the sharded multi-device engine with batch /
     # pool_capacity as per-shard shapes.  Complete runs are byte-identical
@@ -116,7 +128,8 @@ class DiscoveryRequest:
             raise ValidationError(f"unknown request fields: {sorted(unknown)}")
         try:
             for f in ("k", "batch", "pool_capacity", "step_budget",
-                      "candidate_budget", "max_hops", "m_edges", "shards"):
+                      "candidate_budget", "max_hops", "m_edges", "shards",
+                      "steps_per_sync"):
                 if d.get(f) is not None:
                     d[f] = int(d[f])
             for f in ("induced", "use_pallas", "use_cache", "interpret"):
@@ -156,6 +169,9 @@ class DiscoveryRequest:
                 f"candidate_budget must be >= 1, got {self.candidate_budget}")
         if self.shards < 1:
             raise ValidationError(f"shards must be >= 1, got {self.shards}")
+        if self.steps_per_sync < 1:
+            raise ValidationError(
+                f"steps_per_sync must be >= 1, got {self.steps_per_sync}")
         if self.shards > 1 and self.workload == "pattern":
             raise ValidationError(
                 "shards > 1 applies to engine workloads only; pattern "
@@ -248,11 +264,15 @@ class DiscoveryRequest:
         """Canonical, JSON-stable dict of everything that determines the
         *result* of this request — the cache-key payload.
 
-        Excludes ``use_cache`` and ``request_id`` (service plumbing) and
-        the kernel-path knobs ``use_pallas`` / ``interpret``
+        Excludes ``use_cache`` and ``request_id`` (service plumbing), the
+        kernel-path knobs ``use_pallas`` / ``interpret``
         (parity-tested to leave results byte-identical *per step*, so
         kernel- and reference-path runs of the same query share one cache
-        entry).  ``shards`` IS included, like ``batch``/``pool_capacity``:
+        entry), and ``steps_per_sync`` (DESIGN.md §13: complete runs are
+        byte-identical for any fusion depth and budget truncation lands
+        on the same step count, so fused and unfused runs of the same
+        query share one cache entry too).  ``shards`` IS included, like
+        ``batch``/``pool_capacity``:
         complete runs are shard-count invariant, but a run truncated by
         ``step_budget``/``candidate_budget`` is not, and the cache key
         cannot know at lookup time which case a payload is.  Query edges
@@ -363,6 +383,7 @@ def compile_request(req: DiscoveryRequest, registry: GraphRegistry,
     cfg = EngineConfig(k=req.k, batch=req.batch,
                        pool_capacity=req.pool_capacity,
                        max_steps=req.step_budget, shards=req.shards,
+                       steps_per_sync=req.steps_per_sync,
                        use_pallas=req.use_pallas, interpret=req.interpret)
 
     if req.workload == "clique":

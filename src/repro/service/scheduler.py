@@ -60,7 +60,12 @@ class EngineQueryTask:
     def step(self) -> None:
         if self.finished:
             return
-        self.engine.step(self.state)
+        # one scheduled step is one engine macro-step (steps_per_sync fused
+        # super-steps); capping the fused count to the remaining budget
+        # keeps step_budget truncation exact for any steps_per_sync
+        self.engine.step(self.state,
+                         max_inner=self.request.step_budget
+                         - self.state.steps)
         # budgets come from the request, not engine.cfg: the engine may be
         # shared with requests that differ only in budgets
         if self.state.done:
@@ -89,7 +94,8 @@ class EngineQueryTask:
             stats=dict(steps=res.steps, candidates=res.candidates,
                        expanded=res.expanded, pruned=res.pruned,
                        spilled=res.spilled, refilled=res.refilled,
-                       rebalanced=res.rebalanced),
+                       rebalanced=res.rebalanced,
+                       late_pruned=res.late_pruned),
             terminated=self.terminated or "complete")
         return self._payload
 
@@ -154,18 +160,22 @@ class PatternQueryTask:
             stats=dict(steps=self.miner.steps, candidates=res.candidates,
                        expanded=res.groups_expanded,
                        pruned=res.groups_pruned, spilled=0, refilled=0,
-                       rebalanced=0),
+                       rebalanced=0, late_pruned=0),
             terminated=self.terminated or "complete")
         return self._payload
 
 
 # --------------------------------------------------------------- scheduler
 class QueryScheduler:
-    """Round-robins super-steps across live queries.
+    """Round-robins engine steps across live queries.
 
-    ``slice_steps`` is the number of consecutive super-steps a query gets
+    ``slice_steps`` is the number of consecutive engine steps a query gets
     per scheduling turn — 1 is fair round-robin; larger values amortize
     host-side scheduling overhead at the cost of per-query latency spread.
+    When a request sets ``steps_per_sync = T > 1`` each scheduled step is
+    one fused *macro*-step of up to T super-steps (DESIGN.md §13), so a
+    slice covers up to ``slice_steps * T`` super-steps — the two knobs
+    compose: slices amortize scheduling, macro-steps amortize dispatch.
     """
 
     def __init__(self, slice_steps: int = 1):
@@ -275,14 +285,16 @@ class DiscoveryService:
             return PatternQueryTask(req, graph)
         # the engine key covers only what shapes the compiled step: budgets
         # are enforced per-task (so they're dropped from the spec), while
-        # use_pallas/interpret change the kernel path without changing
-        # results (so they're added back — both are deliberately absent
-        # from the result-cache key; shards is already in the spec)
+        # use_pallas/interpret/steps_per_sync change the compiled step
+        # without changing complete-run results (so they're added back —
+        # all three are deliberately absent from the result-cache key;
+        # shards is already in the spec)
         engine_spec = req.canonical_spec()
         engine_spec.pop("step_budget", None)
         engine_spec.pop("candidate_budget", None)
         engine_spec["use_pallas"] = req.use_pallas
         engine_spec["interpret"] = req.interpret
+        engine_spec["steps_per_sync"] = req.steps_per_sync
         engine_key = make_cache_key(graph.fingerprint, engine_spec)
         engine = self._engines.get(engine_key)
         if engine is None:

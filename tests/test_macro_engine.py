@@ -1,0 +1,281 @@
+"""Fused macro-step engine (DESIGN.md §13) + vectorized VPQ merge.
+
+Macro-stepping is a pure dispatch optimization: `steps_per_sync = T` fuses
+up to T super-steps into one jitted while_loop between host syncs.  The
+contract tested here: complete runs are byte-identical for any T (and any
+shard count), step budgets truncate at exactly the same step count for any
+T, the overflow accumulator early-exit preserves parity, and the vectorized
+blockwise VPQ merge reproduces the per-entry heap merge byte-for-byte.
+
+The sharded variants need >= 8 devices and run in the CI ``distributed``
+job under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import dataclasses
+import heapq
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.clique import make_clique_computation
+from repro.core.engine import Engine, EngineConfig
+from repro.core.iso import build_iso_index, make_iso_computation
+from repro.core.vpq import NEG, VirtualPriorityQueue
+from repro.core.weighted_clique import make_weighted_clique_computation
+from repro.data.synthetic_graphs import (densifying_graph, labeled_graph,
+                                         planted_clique_graph)
+
+
+@pytest.fixture(scope="module")
+def clique_setup():
+    """Dense graph + tiny pool: spill, refill, and late pruning all occur."""
+    g = densifying_graph(96, 900, seed=0)
+    comp = make_clique_computation(g)
+    cfg = EngineConfig(k=3, batch=8, pool_capacity=128, max_steps=100_000)
+    ref = Engine(comp, cfg).run()
+    assert ref.spilled > 0 and ref.refilled > 0   # the regime under test
+    return comp, cfg, ref
+
+
+def _assert_parity(ref, res):
+    assert np.array_equal(ref.result_keys, res.result_keys)
+    assert np.array_equal(ref.result_states, res.result_states)
+
+
+# ------------------------------------------------------------ fused parity
+@pytest.mark.parametrize("spill", ["host", "disk"])
+@pytest.mark.parametrize("T", [2, 16])
+def test_clique_macro_parity(clique_setup, tmp_path, spill, T):
+    comp, cfg, ref = clique_setup
+    res = Engine(comp, dataclasses.replace(
+        cfg, steps_per_sync=T, spill=spill,
+        spill_dir=str(tmp_path) if spill == "disk" else None)).run()
+    _assert_parity(ref, res)
+    assert res.syncs < res.steps            # fusion actually amortized
+    assert res.late_pruned == ref.late_pruned
+
+
+@pytest.mark.parametrize("spill", ["host", "disk"])
+def test_iso_macro_parity(tmp_path, spill):
+    gl = labeled_graph(n=60, m=220, n_labels=3, seed=5)
+    comp = make_iso_computation(
+        gl, [(0, 1), (1, 2), (0, 2)], [1, 1, 1],
+        build_iso_index(gl, max_hops=2))
+    cfg = EngineConfig(k=3, batch=4, pool_capacity=32, max_steps=100_000,
+                       spill=spill,
+                       spill_dir=str(tmp_path) if spill == "disk" else None)
+    ref = Engine(comp, cfg).run()
+    res = Engine(comp, dataclasses.replace(cfg, steps_per_sync=16)).run()
+    _assert_parity(ref, res)
+    assert res.syncs < res.steps or res.steps <= 1
+
+
+def test_weighted_clique_macro_parity():
+    g = densifying_graph(50, 180, seed=3)
+    weights = np.random.default_rng(3).integers(1, 20, g.n)
+    comp = make_weighted_clique_computation(g, weights)
+    cfg = EngineConfig(k=2, batch=8, pool_capacity=64, max_steps=50_000)
+    ref = Engine(comp, cfg).run()
+    res = Engine(comp, dataclasses.replace(cfg, steps_per_sync=8)).run()
+    _assert_parity(ref, res)
+
+
+# -------------------------------------------------- accumulator early exit
+def test_overflow_accumulator_fill_early_exits(clique_setup):
+    """A minimum-capacity accumulator forces the fused loop back to the
+    host whenever a step spilled — more syncs, identical results."""
+    comp, cfg, ref = clique_setup
+    full = Engine(comp, dataclasses.replace(cfg, steps_per_sync=16)).run()
+    tight = Engine(comp, dataclasses.replace(
+        cfg, steps_per_sync=16, overflow_accum=1)).run()   # raised to B+M
+    _assert_parity(ref, full)
+    _assert_parity(ref, tight)
+    # the tight accumulator cannot hold two blocks, so every spilling step
+    # ends its macro window: strictly more syncs than the full-size run,
+    # but still fewer than one per step (non-spilling stretches fuse)
+    assert tight.syncs > full.syncs
+    assert tight.syncs < tight.steps
+    assert tight.spilled == ref.spilled
+
+
+# ------------------------------------------------------- budget exactness
+def test_max_steps_truncates_identically(clique_setup):
+    comp, cfg, ref = clique_setup
+    assert ref.steps > 12
+    for T in (1, 4, 16):
+        res = Engine(comp, dataclasses.replace(
+            cfg, max_steps=12, steps_per_sync=T)).run()
+        assert res.steps == 12, f"T={T}: ran {res.steps} steps, not 12"
+
+
+def test_service_step_budget_truncates_identically(clique_setup):
+    from repro.service import DiscoveryRequest, DiscoveryService
+    comp, cfg, ref = clique_setup
+    svc = DiscoveryService()
+    svc.register_graph("g", densifying_graph(96, 900, seed=0))
+    for T in (1, 4, 16):
+        resp = svc.query(DiscoveryRequest(
+            graph="g", workload="clique", k=3, batch=8, pool_capacity=128,
+            step_budget=7, steps_per_sync=T, use_cache=False))
+        assert resp.status == "ok", resp.error
+        assert resp.terminated == "step_budget"
+        assert resp.stats["steps"] == 7, f"T={T}: {resp.stats['steps']}"
+
+
+# ------------------------------------------------------------- service layer
+def test_steps_per_sync_service_contract(clique_setup):
+    """Excluded from the result-cache key (complete runs are T-invariant),
+    validated >= 1, ignored by pattern, and late_pruned is surfaced."""
+    from repro.service import DiscoveryRequest, DiscoveryService
+    r1 = DiscoveryRequest(graph="g", workload="clique", k=3)
+    r2 = DiscoveryRequest(graph="g", workload="clique", k=3,
+                          steps_per_sync=16)
+    assert r1.canonical_spec() == r2.canonical_spec()
+
+    svc = DiscoveryService()
+    svc.register_graph("g", densifying_graph(96, 900, seed=0))
+    bad = svc.query(DiscoveryRequest(graph="g", workload="clique",
+                                     steps_per_sync=0))
+    assert bad.status == "error" and "steps_per_sync" in bad.error
+
+    a = svc.query(DiscoveryRequest(graph="g", workload="clique", k=3,
+                                   batch=8, pool_capacity=128,
+                                   use_cache=False))
+    b = svc.query(DiscoveryRequest(graph="g", workload="clique", k=3,
+                                   batch=8, pool_capacity=128,
+                                   steps_per_sync=16, use_cache=False))
+    assert a.result_keys == b.result_keys and a.results == b.results
+    assert a.stats["late_pruned"] > 0          # spilling regime: audited
+    assert a.stats["late_pruned"] == b.stats["late_pruned"]
+
+
+def test_pattern_accepts_and_ignores_steps_per_sync():
+    from repro.service import DiscoveryRequest, DiscoveryService
+    svc = DiscoveryService()
+    svc.register_graph("cite", labeled_graph(40, 120, 3, seed=2))
+    base = svc.query(DiscoveryRequest(graph="cite", workload="pattern",
+                                      m_edges=2, k=2, use_cache=False))
+    fused = svc.query(DiscoveryRequest(graph="cite", workload="pattern",
+                                       m_edges=2, k=2, steps_per_sync=16,
+                                       use_cache=False))
+    assert base.status == fused.status == "ok"
+    assert base.result_keys == fused.result_keys
+    assert base.results == fused.results
+    assert fused.stats["late_pruned"] == 0
+
+
+# ------------------------------------------------- vectorized VPQ merge
+def _heap_pop_chunk(vpq, n, min_ub=NEG):
+    """The pre-vectorization per-entry heap merge, kept as the reference
+    semantics for the blockwise merge (priority desc, run-index tie-break,
+    stop at the n-th surviving entry)."""
+    vpq._flush_pending()
+    heap = []
+    for i, r in enumerate(vpq.runs):
+        if not r.exhausted:
+            heapq.heappush(heap, (-r.head_prio(), i))
+    out_s, out_p, out_u = [], [], []
+    while heap and len(out_p) < n:
+        _, i = heapq.heappop(heap)
+        state, p, u = vpq.runs[i].pop()
+        if u >= min_ub:
+            out_s.append(state)
+            out_p.append(p)
+            out_u.append(u)
+        if not vpq.runs[i].exhausted:
+            heapq.heappush(heap, (-vpq.runs[i].head_prio(), i))
+    vpq.runs = [r for r in vpq.runs if not r.exhausted]
+    if not out_p:
+        return (np.zeros((0, vpq.state_width), np.int32),
+                np.zeros((0,), np.int32), np.zeros((0,), np.int32))
+    return (np.stack(out_s).astype(np.int32),
+            np.asarray(out_p, np.int32), np.asarray(out_u, np.int32))
+
+
+def test_vectorized_pop_chunk_matches_heap_merge():
+    """Fuzz: tie-heavy priorities, ragged buffers, pruning thresholds,
+    partial chunks — the blockwise merge must be byte-identical to the
+    per-entry heap merge, including how much it leaves in the queue."""
+    rng = np.random.default_rng(7)
+    for trial in range(40):
+        n_entries = int(rng.integers(1, 300))
+        frag = int(rng.integers(2, 9))
+        bufsz = int(rng.integers(2, 24))
+        prios = rng.integers(-4, 4, n_entries).astype(np.int32)
+        ubs = rng.integers(-4, 4, n_entries).astype(np.int32)
+        states = rng.integers(0, 99, (n_entries, 3)).astype(np.int32)
+
+        def build():
+            v = VirtualPriorityQueue(state_width=3, backend="host",
+                                     buffer_size=bufsz, run_flush_size=1)
+            for i in range(0, n_entries, frag):
+                sl = slice(i, i + frag)
+                v.maybe_push(states[sl], prios[sl], ubs[sl])
+                v._flush_pending()
+            return v
+
+        vec, ref = build(), build()
+        while len(vec) or len(ref):
+            chunk = int(rng.integers(1, 48))
+            mu = int(rng.integers(-5, 5))
+            got = vec.pop_chunk(chunk, min_ub=mu)
+            want = _heap_pop_chunk(ref, chunk, min_ub=mu)
+            for a, b in zip(got, want):
+                assert np.array_equal(a, b), (trial, chunk, mu)
+            assert len(vec) == len(ref), trial
+
+
+def test_late_pruned_counter():
+    vpq = VirtualPriorityQueue(state_width=2, backend="host",
+                               run_flush_size=8)
+    prio = np.arange(32, dtype=np.int32)
+    states = np.stack([prio, prio], 1).astype(np.int32)
+    vpq.maybe_push(states, prio, prio.copy())
+    _, got, _ = vpq.pop_chunk(32, min_ub=20)   # 0..19 dominated
+    assert list(got) == list(range(31, 19, -1))
+    assert vpq.total_late_pruned == 20
+    assert len(vpq) == 0
+
+
+# --------------------------------------------- sharded (CI distributed job)
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs >= 8 devices (CI distributed job forces "
+                           "8 host devices)")
+@pytest.mark.parametrize("shards", [1, 2, 8])
+def test_sharded_macro_parity_inprocess(clique_setup, shards):
+    """Fused sharded runs reproduce the unfused single-device result at
+    every shard count; the per-step §4 bound exchange inside the fused
+    loop keeps pruning tight, and the global exit vote keeps refill /
+    rebalance cadence — spill accounting matches the unfused run."""
+    from repro.distributed import ShardedEngine
+    comp, cfg, ref = clique_setup
+    for T in (4, 16):
+        res = ShardedEngine(comp, dataclasses.replace(
+            cfg, shards=shards, steps_per_sync=T)).run()
+        _assert_parity(ref, res)
+        assert res.syncs < res.steps or res.steps <= 1
+        unfused = ShardedEngine(comp, dataclasses.replace(
+            cfg, shards=shards)).run()
+        assert res.spilled == unfused.spilled
+        assert res.late_pruned == unfused.late_pruned
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs >= 8 devices (CI distributed job forces "
+                           "8 host devices)")
+def test_sharded_macro_disk_spill_cleanup(tmp_path):
+    g = planted_clique_graph(n=80, m=300, clique_size=6, seed=1)
+    comp = make_clique_computation(g)
+    cfg = EngineConfig(k=3, batch=8, pool_capacity=64, max_steps=50_000,
+                       spill="disk", spill_dir=str(tmp_path),
+                       steps_per_sync=16)
+    ref = Engine(comp, dataclasses.replace(
+        cfg, spill="host", spill_dir=None, steps_per_sync=1)).run()
+    from repro.distributed import ShardedEngine
+    res = ShardedEngine(comp, dataclasses.replace(cfg, shards=2)).run()
+    _assert_parity(ref, res)
+    assert res.spilled > 0
+    for i in range(2):       # leak-free: every run file closed
+        sub = tmp_path / f"shard{i}"
+        assert not sub.exists() or list(sub.iterdir()) == []
