@@ -64,7 +64,8 @@ def _sweep(name, comp, cfg, rounds, tmpdir):
             sps = res.steps / wall
             rows.append(dict(
                 workload=name, spill=backend, steps_per_sync=T,
-                wall_s=round(wall, 4), steps=res.steps, syncs=res.syncs,
+                wall_s=round(wall, 4), steps=res.steps,
+                host_syncs=res.host_syncs,
                 steps_per_sec=round(sps, 1),
                 speedup_vs_T1=round(sps / base_sps, 2),
                 spilled=res.spilled, refilled=res.refilled,
@@ -108,12 +109,12 @@ def run(fast: bool = False, rounds: int = 3, tmpdir=None):
 def main(fast: bool = False):
     rows = run(fast=fast)
     print("(top-k parity vs steps_per_sync=1 asserted on every row)")
-    print(f"{'workload':>8} {'spill':>5} {'T':>3} {'steps':>6} {'syncs':>6} "
+    print(f"{'workload':>8} {'spill':>5} {'T':>3} {'steps':>6} {'hsync':>6} "
           f"{'wall s':>8} {'steps/s':>9} {'vs T=1':>7} {'spilled':>8} "
           f"{'late_pr':>8}")
     for r in rows:
         print(f"{r['workload']:>8} {r['spill']:>5} {r['steps_per_sync']:>3} "
-              f"{r['steps']:>6} {r['syncs']:>6} {r['wall_s']:>8.3f} "
+              f"{r['steps']:>6} {r['host_syncs']:>6} {r['wall_s']:>8.3f} "
               f"{r['steps_per_sec']:>9.1f} {r['speedup_vs_T1']:>6.2f}x "
               f"{r['spilled']:>8} {r['late_pruned']:>8}")
     return rows

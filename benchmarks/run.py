@@ -22,8 +22,12 @@ def main():
     ap.add_argument("--out", default="artifacts/bench")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write per-benchmark wall-clock timings + "
-                         "result rows to PATH (e.g. BENCH_PR5.json) — the "
+                         "result rows to PATH (e.g. BENCH_PR6.json) — the "
                          "perf-trajectory artifact CI uploads")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only benchmarks whose registry name contains "
+                         "SUBSTR (e.g. 'distributed' for the stale-bound "
+                         "K-sweep artifact)")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     results = {}
@@ -37,6 +41,8 @@ def main():
                       ("distributed (§11)", bench_distributed),
                       ("labeled (§12)", bench_labeled),
                       ("engine macro-step (§13)", bench_engine)]:
+        if args.only and args.only not in name:
+            continue
         print(f"\n=== {name} ===")
         t0 = time.time()
         results[name] = mod.main(fast=args.fast)

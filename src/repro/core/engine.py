@@ -98,6 +98,30 @@ class EngineConfig:
     # earlier syncs (the loop exits when the next block might not fit);
     # values below B + M are raised to B + M.
     overflow_accum: Optional[int] = None
+    # staleness-tolerant bound exchange (DESIGN.md §14): number of inner
+    # super-steps the sharded engine runs between §4 `bound_sync`
+    # all-gathers.  Between exchanges every shard prunes against
+    # max(last-exchanged global bound, its own fresh local k-th best) —
+    # both are lower bounds on the fresh global k-th best, so the interim
+    # threshold is only ever *looser* than the fresh one and complete
+    # runs stay byte-identical for any value (property-tested in
+    # tests/test_stale_bound.py), while collectives drop by a factor of
+    # K.  Like steps_per_sync it is excluded from the service
+    # result-cache key (budget truncation still lands on the same step
+    # count) but included in the engine-reuse key.  The single-device
+    # Engine has no collective to amortize and ignores it.  K > 1
+    # implies macro-stepping: the sharded engine raises the fused length
+    # to the next multiple of K so every fused call ends on an exchange
+    # boundary, and clamps K so a full K-step segment always fits the
+    # overflow accumulator.
+    sync_every: int = 1
+    # debug/test hook (tests/test_stale_bound.py): record, per fused
+    # inner step, the threshold each shard actually pruned with and the
+    # fresh global bound a per-step exchange would have produced
+    # (surfaced via EngineResult.per_shard["bound_used"/"bound_fresh"]).
+    # Costs one extra all-gather per stale step — never enable outside
+    # tests.
+    record_bound_trace: bool = False
     # kernel-path knobs (DESIGN.md §10): a declarative record consumed at
     # computation-construction time (service.api.compile_request reads
     # them when calling make_*_computation) — NOT by the engine loop,
@@ -122,7 +146,12 @@ class EngineResult:
     refilled: int
     rebalanced: int = 0           # spilled entries moved across shards (§11)
     late_pruned: int = 0          # dominated entries dropped at VPQ refill
-    syncs: int = 0                # host↔device round-trips (== steps at T=1)
+    # bound-exchange collectives actually run (§14): ceil(steps /
+    # sync_every) per fused call for the sharded engine; 0 for the
+    # single-device engine, which computes its threshold locally and
+    # never talks to another shard
+    syncs: int = 0
+    host_syncs: int = 0           # host↔device round-trips (== steps at T=1)
     per_shard: Optional[dict] = None  # ShardedEngine: per-shard stat lists
 
 
@@ -147,7 +176,8 @@ class EngineState:
     expanded: int = 0
     pruned: int = 0
     refilled: int = 0
-    syncs: int = 0                # host↔device round-trips taken so far
+    syncs: int = 0                # bound-exchange collectives (0 unsharded)
+    host_syncs: int = 0           # host↔device round-trips taken so far
     threshold: int = int(NEG)
     pool_occupancy: int = 0
     done: bool = False            # pool and VPQ both drained
@@ -298,7 +328,8 @@ class Engine:
     # ------------------------------------------------------------ macro-step
     def _macro_impl(self, pool_states, pool_prio, pool_ub,
                     result_states, result_keys, t_max, vpq_nonempty, occ0,
-                    bound_sync=None, any_reduce=None):
+                    bound_sync=None, any_reduce=None, sync_every=1,
+                    stale_sync=None, record_bounds=False):
         """Up to ``t_max`` fused super-steps in one ``lax.while_loop``
         (DESIGN.md §13).  Per-step overflow blocks land in a fixed
         ``[acc_cap, S]`` on-device accumulator — each block is written at
@@ -309,56 +340,101 @@ class Engine:
 
         The loop hands control back to the host exactly when host work is
         due, i.e. it continues only while (a) steps remain, (b) the next
-        overflow block is guaranteed to fit, (c) the pool is non-empty,
-        and (d) no refill is possible — the pool is at or above the
-        ``C//2`` watermark, or nothing is spilled (VPQ empty at entry and
-        accumulator empty).  (d) reproduces the unfused refill cadence
-        step-for-step: the fused engine syncs at the first step whose
-        unfused counterpart would have refilled.
+        overflow block (segment of blocks under ``sync_every > 1``) is
+        guaranteed to fit, (c) the pool is non-empty, and (d) no refill is
+        possible — the pool is at or above the ``C//2`` watermark, or
+        nothing is spilled (VPQ empty at entry and accumulator empty).
+        (d) reproduces the unfused refill cadence step-for-step: the fused
+        engine syncs at the first step whose unfused counterpart would
+        have refilled.
 
         ``bound_sync`` / ``any_reduce`` are the sharded engine's hooks:
-        the first is the §4 threshold collective run *every inner step*
-        (pruning tightness is unchanged by fusion), the second reduces
+        the first is the §4 threshold collective, the second reduces
         per-shard continue/stop votes to a global decision so all shards
-        leave the loop together and the in-loop collective stays aligned.
+        leave the loop together and the in-loop collectives stay aligned.
         The continue flag is computed in the loop *body* and carried, so
         the ``while_loop`` cond stays collective-free.
-        """
-        C, S, cap = self.C, self.S, self.acc_cap
-        blk = self.B + self.M
 
-        def cont_flag(t_next, w, occ):
-            room = (w + blk) <= cap
-            active = occ > 0
-            low = occ < (C // 2)
-            refillable = vpq_nonempty | (w > 0)
-            if any_reduce is None:
-                need_host = jnp.logical_not(room) | (low & refillable)
-                cont = jnp.logical_not(need_host) & active
-            else:
-                # per-shard votes -> one global decision: stop when ANY
-                # shard needs host service (its own refill moment or a
-                # full accumulator), keep going while ANY shard is active;
-                # refill-ability is global because the host rebalancer can
-                # move any shard's spill to any starving shard
-                need_host = jnp.logical_not(room) | \
-                    (low & any_reduce(refillable))
-                cont = jnp.logical_not(any_reduce(need_host)) & \
-                    any_reduce(active)
-            return (t_next < t_max) & cont
+        ``sync_every = K > 1`` selects the staleness-tolerant cadence
+        (DESIGN.md §14): each loop iteration is one *segment* — a head
+        step that runs the fresh ``bound_sync`` exchange followed by up
+        to ``K - 1`` tail steps whose threshold is
+        ``stale_sync(last exchange, local result keys)``, a bound that is
+        only ever *looser* than the fresh one (so pruning stays sound and
+        complete runs byte-identical) — and the continue/stop votes are
+        reduced once per segment instead of once per step, so collectives
+        drop by a factor of K.  Tail steps run unconditionally (a drained
+        shard pads with no-op steps until the boundary) so every shard
+        reaches each collective together.  ``record_bounds`` additionally
+        journals, per inner step, the threshold actually used and the
+        fresh global bound a per-step exchange would have produced
+        (``stats["bound_used"/"bound_fresh"]``, valid prefix ``steps``) —
+        the §14 staleness invariant made observable for tests.
+        """
+        if sync_every <= 1 and not record_bounds:
+            return self._macro_flat(
+                pool_states, pool_prio, pool_ub, result_states, result_keys,
+                t_max, vpq_nonempty, occ0, bound_sync, any_reduce)
+        return self._macro_segmented(
+            pool_states, pool_prio, pool_ub, result_states, result_keys,
+            t_max, vpq_nonempty, occ0, bound_sync, any_reduce,
+            max(1, sync_every), stale_sync, record_bounds)
+
+    def _cont_flag(self, seg_blocks, vpq_nonempty, any_reduce,
+                   t_max, t_next, w, occ):
+        """Continue/stop decision shared by both macro variants:
+        ``seg_blocks`` is the number of overflow blocks the next loop
+        iteration may produce (1 flat, K segmented)."""
+        C, cap = self.C, self.acc_cap
+        room = (w + seg_blocks * (self.B + self.M)) <= cap
+        active = occ > 0
+        low = occ < (C // 2)
+        refillable = vpq_nonempty | (w > 0)
+        if any_reduce is None:
+            need_host = jnp.logical_not(room) | (low & refillable)
+            cont = jnp.logical_not(need_host) & active
+        else:
+            # per-shard votes -> one global decision: stop when ANY
+            # shard needs host service (its own refill moment or a
+            # full accumulator), keep going while ANY shard is active;
+            # refill-ability is global because the host rebalancer can
+            # move any shard's spill to any starving shard
+            need_host = jnp.logical_not(room) | \
+                (low & any_reduce(refillable))
+            cont = jnp.logical_not(any_reduce(need_host)) & \
+                any_reduce(active)
+        return (t_next < t_max) & cont
+
+    def _fused_step(self, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums,
+                    sync_fn):
+        """One inner super-step plus overflow-accumulator/stat packing —
+        the body both macro variants repeat."""
+        ps, pp, pu, rs, rk, (o_s, o_p, o_u), stats = self._step_impl(
+            ps, pp, pu, rs, rk, bound_sync=sync_fn)
+        cnt = jnp.sum(o_p > NEG).astype(jnp.int32)
+        acc_s = jax.lax.dynamic_update_slice(acc_s, o_s, (w, 0))
+        acc_p = jax.lax.dynamic_update_slice(acc_p, o_p, (w,))
+        acc_u = jax.lax.dynamic_update_slice(acc_u, o_u, (w,))
+        w = w + cnt
+        sums = {name: sums[name] + stats[name]
+                for name in ("expanded", "created", "pruned")}
+        return ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums, stats
+
+    def _macro_flat(self, pool_states, pool_prio, pool_ub,
+                    result_states, result_keys, t_max, vpq_nonempty, occ0,
+                    bound_sync, any_reduce):
+        """The ``sync_every == 1`` macro loop: one step per iteration, the
+        §4 exchange (when sharded) and the exit vote every inner step."""
+        S, cap = self.S, self.acc_cap
+        cont_flag = partial(self._cont_flag, 1, vpq_nonempty, any_reduce,
+                            t_max)
 
         def body(carry):
             (t, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums, _occ,
              _thr, _cont) = carry
-            ps, pp, pu, rs, rk, (o_s, o_p, o_u), stats = self._step_impl(
-                ps, pp, pu, rs, rk, bound_sync=bound_sync)
-            cnt = jnp.sum(o_p > NEG).astype(jnp.int32)
-            acc_s = jax.lax.dynamic_update_slice(acc_s, o_s, (w, 0))
-            acc_p = jax.lax.dynamic_update_slice(acc_p, o_p, (w,))
-            acc_u = jax.lax.dynamic_update_slice(acc_u, o_u, (w,))
-            w = w + cnt
-            sums = {name: sums[name] + stats[name]
-                    for name in ("expanded", "created", "pruned")}
+            (ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums, stats) = \
+                self._fused_step(ps, pp, pu, rs, rk, acc_s, acc_p, acc_u,
+                                 w, sums, bound_sync)
             occ = stats["pool_occupancy"]
             return (t + 1, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w,
                     sums, occ, stats["threshold"],
@@ -377,6 +453,99 @@ class Engine:
          _cont) = jax.lax.while_loop(lambda c: c[-1], body, carry)
         stats = dict(sums, steps=t, spill_count=w, pool_occupancy=occ,
                      threshold=thr)
+        return ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, stats
+
+    def _macro_segmented(self, pool_states, pool_prio, pool_ub,
+                         result_states, result_keys, t_max, vpq_nonempty,
+                         occ0, bound_sync, any_reduce, sync_every,
+                         stale_sync, record_bounds):
+        """The ``sync_every = K > 1`` macro loop (DESIGN.md §14): each
+        iteration runs one K-step segment — fresh exchange at the head,
+        stale-bound tail, one vote at the boundary.  Collective-free when
+        ``bound_sync is None`` (single-device with ``record_bound_trace``):
+        the head threshold is then the local k-th best and the stale/fresh
+        traces coincide by construction."""
+        S, cap, K, k = self.S, self.acc_cap, sync_every, self.k
+        cont_flag = partial(self._cont_flag, K, vpq_nonempty, any_reduce,
+                            t_max)
+        if stale_sync is None:
+            stale_sync = make_stale_bound_sync(k)
+
+        def fresh_fn(srs, srk):   # what a per-step exchange would produce
+            if bound_sync is not None:
+                return bound_sync(srs, srk)
+            return jnp.where(srk[k - 1] > NEG, srk[k - 1], NEG)
+
+        def body(carry):
+            (t, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums, _occ,
+             _stale, _cont, tr_u, tr_f) = carry
+            # segment head: the fresh §4 exchange becomes this segment's
+            # carried global bound
+            (ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums, stats) = \
+                self._fused_step(ps, pp, pu, rs, rk, acc_s, acc_p, acc_u,
+                                 w, sums, bound_sync)
+            stale = stats["threshold"]
+            occ = stats["pool_occupancy"]
+            if record_bounds:
+                tr_u = tr_u.at[t].set(stale)
+                tr_f = tr_f.at[t].set(stale)
+            t = t + 1
+
+            def tail_step(_i, c):
+                (t_i, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums,
+                 _o, tr_u, tr_f) = c
+                box = {}
+
+                def sync_fn(srs, srk):
+                    used = stale_sync(stale, srk)
+                    box["used"] = used
+                    if record_bounds:
+                        box["fresh"] = fresh_fn(srs, srk)
+                    return used
+
+                (ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums,
+                 stats) = self._fused_step(ps, pp, pu, rs, rk, acc_s,
+                                           acc_p, acc_u, w, sums, sync_fn)
+                if record_bounds:
+                    tr_u = tr_u.at[t_i].set(box["used"])
+                    tr_f = tr_f.at[t_i].set(box["fresh"])
+                return (t_i + 1, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u,
+                        w, sums, stats["pool_occupancy"], tr_u, tr_f)
+
+            # tail steps run unconditionally to the segment boundary (or
+            # the step budget) so every shard meets the next collective;
+            # a drained shard's extra steps dequeue nothing and are no-ops
+            n_tail = jnp.minimum(jnp.int32(K - 1), t_max - t)
+            (t, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums, occ,
+             tr_u, tr_f) = jax.lax.fori_loop(
+                jnp.int32(0), n_tail, tail_step,
+                (t, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums, occ,
+                 tr_u, tr_f))
+            return (t, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums,
+                    occ, stale, cont_flag(t, w, occ), tr_u, tr_f)
+
+        zero = jnp.int32(0)
+        trace = jnp.full((self.T,), NEG, jnp.int32)
+        carry = (zero, pool_states, pool_prio, pool_ub,
+                 result_states, result_keys,
+                 jnp.zeros((cap, S), jnp.int32),
+                 jnp.full((cap,), NEG, jnp.int32),
+                 jnp.full((cap,), NEG, jnp.int32),
+                 zero, dict(expanded=zero, created=zero, pruned=zero),
+                 jnp.asarray(occ0, jnp.int32), jnp.int32(NEG),
+                 jnp.asarray(True),   # the first segment always runs
+                 trace, trace)
+        (t, ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, w, sums, occ, stale,
+         _cont, tr_u, tr_f) = jax.lax.while_loop(
+            lambda c: c[13], body, carry)
+        # report the *exchanged* bound (replicated across shards) as the
+        # macro threshold: the host's late-pruning cutoff must be a global
+        # lower bound, and stale is exactly that (§14 soundness)
+        stats = dict(sums, steps=t, spill_count=w, pool_occupancy=occ,
+                     threshold=stale)
+        if record_bounds:
+            stats["bound_used"] = tr_u
+            stats["bound_fresh"] = tr_f
         return ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, stats
 
     # ---------------------------------------------------------------- insert
@@ -442,7 +611,7 @@ class Engine:
                 st.result_states, st.result_keys)
             stats = jax.tree.map(int, jax.device_get(stats))
             st.steps += 1
-            st.syncs += 1
+            st.host_syncs += 1
             st.expanded += stats["expanded"]
             st.candidates += stats["created"]
             st.pruned += stats["pruned"]
@@ -460,7 +629,7 @@ class Engine:
             np.int32(t_cap), len(st.vpq) > 0, np.int32(st.pool_occupancy))
         stats = jax.tree.map(int, jax.device_get(stats))
         st.steps += stats["steps"]
-        st.syncs += 1
+        st.host_syncs += 1
         st.expanded += stats["expanded"]
         st.candidates += stats["created"]
         st.pruned += stats["pruned"]
@@ -508,7 +677,7 @@ class Engine:
             steps=st.steps, candidates=st.candidates, expanded=st.expanded,
             pruned=st.pruned, spilled=st.vpq.total_spilled,
             refilled=st.refilled, late_pruned=st.vpq.total_late_pruned,
-            syncs=st.syncs)
+            syncs=st.syncs, host_syncs=st.host_syncs)
 
     # ------------------------------------------------------------------- run
     def run(self, progress_every: int = 0) -> EngineResult:
@@ -547,3 +716,28 @@ def make_sharded_bound_sync(axis_name: str, k: int):
                              allk.reshape(-1), k)
         return jnp.where(topk[k - 1] > NEG, topk[k - 1], NEG)
     return sync
+
+
+def make_stale_bound_sync(k: int):
+    """The staleness-aware companion to :func:`make_sharded_bound_sync`
+    (DESIGN.md §14): the threshold a shard prunes with *between* exchanges,
+    computed with no collective at all.
+
+    ``stale(last_exchanged, local_result_keys)`` returns
+    ``max(last-exchanged global k-th best, fresh local k-th best)``.  Both
+    operands are lower bounds on the current fresh global k-th best — the
+    global result set only improves monotonically after the exchange, and
+    any shard's local k-th best can only be dominated by the union's — so
+    their max is too, which means interim pruning is at worst *looser*
+    than per-step exchange and never drops a true result.  Folding the
+    local k-th in (rather than the exchanged bound alone) keeps
+    single-shard runs byte-identical for every ``sync_every`` and lets a
+    shard that finds great results mid-segment prune aggressively without
+    waiting for the next all-gather.
+    """
+    def stale(last_exchanged: jnp.ndarray,
+              local_result_keys: jnp.ndarray) -> jnp.ndarray:
+        kth = local_result_keys[k - 1]
+        local = jnp.where(kth > NEG, kth, NEG)
+        return jnp.maximum(last_exchanged, local)
+    return stale

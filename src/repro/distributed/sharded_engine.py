@@ -44,14 +44,24 @@ refill / rebalance blocks and accumulates counters.
 Macro-stepping (DESIGN.md §13) composes with sharding: under
 ``EngineConfig.steps_per_sync = T > 1`` the fused ``while_loop`` of
 :meth:`repro.core.engine.Engine._macro_impl` runs *per shard inside one
-shard_map*, with the §4 ``bound_sync`` collective exchanged every inner
-step — pruning tightness is unchanged by fusion — and the per-shard
-continue/stop votes reduced to one global decision (``psum``) so every
-shard leaves the loop together and the in-loop collectives stay aligned.
-The loop returns to the host as soon as *any* shard hits its refill
-watermark (with spill available anywhere — the rebalancer can move it),
-fills its overflow accumulator, or the fleet drains, so refill and
-rebalance cadence match the unfused engine.
+shard_map*, and the per-shard continue/stop votes are reduced to one
+global decision (``psum``) so every shard leaves the loop together and
+the in-loop collectives stay aligned.  The loop returns to the host as
+soon as *any* shard hits its refill watermark (with spill available
+anywhere — the rebalancer can move it), fills its overflow accumulator,
+or the fleet drains, so refill and rebalance cadence match the unfused
+engine.
+
+Staleness-tolerant bound exchange (DESIGN.md §14): under
+``EngineConfig.sync_every = K > 1`` the §4 collective fires only every
+K-th inner step; in between, each shard prunes against
+``max(last-exchanged global bound, fresh local k-th best)``
+(:func:`~repro.core.engine.make_stale_bound_sync`) — both lower bounds on
+the fresh global k-th best, so interim pruning is at worst *looser* and
+complete runs stay byte-identical for every K while collectives (the
+all-gather *and* the exit votes) drop by a factor of K.
+``EngineResult.syncs`` counts the exchanges actually run
+(``ceil(inner_steps / K)``); ``host_syncs`` counts host round-trips.
 
 Label-constrained computations (DESIGN.md §12) thread through unchanged:
 the predicate's bitsets — class rows, allowed-vertex mask, restricted
@@ -74,7 +84,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.api import NEG, SubgraphComputation
 from repro.core.engine import (Engine, EngineConfig, EngineResult,
                                donatable_pool_argnums,
-                               make_sharded_bound_sync, merge_topk)
+                               make_sharded_bound_sync,
+                               make_stale_bound_sync, merge_topk)
 from repro.core.vpq import VirtualPriorityQueue
 
 
@@ -122,9 +133,15 @@ class ShardedEngineState:
     pruned: int = 0
     refilled: int = 0
     rebalanced: int = 0
-    syncs: int = 0                # host↔device round-trips taken so far
+    syncs: int = 0                # §4 bound-exchange collectives run so far
+    host_syncs: int = 0           # host↔device round-trips taken so far
     threshold: int = int(NEG)
     done: bool = False            # every shard pool and VPQ drained
+    # per-macro-call bound traces (config.record_bound_trace): each entry
+    # is a [shards, inner_steps] int32 pair — threshold actually used /
+    # fresh per-step-exchange bound (DESIGN.md §14 invariant, test hook)
+    bound_used: List[np.ndarray] = dataclasses.field(default_factory=list)
+    bound_fresh: List[np.ndarray] = dataclasses.field(default_factory=list)
 
 
 class ShardedEngine:
@@ -151,9 +168,30 @@ class ShardedEngine:
                 f"or lower `shards`")
         self.mesh = Mesh(np.asarray(devices[:self.shards]), ("data",))
 
+        # staleness-tolerant bound exchange (DESIGN.md §14): K inner steps
+        # per §4 all-gather.  K is clamped so one K-step segment's overflow
+        # always fits an explicitly-sized accumulator, and steps_per_sync
+        # is raised to a multiple of K so every fused macro call ends on an
+        # exchange boundary — that makes the host-side collective count
+        # exactly ceil(total_inner_steps / K) for complete runs.
+        if config.sync_every < 1:
+            raise ValueError(
+                f"sync_every must be >= 1, got {config.sync_every}")
+        blk = config.batch + max(config.max_children or 0, comp.num_actions)
+        K = config.sync_every
+        if config.overflow_accum:
+            K = max(1, min(K, config.overflow_accum // blk))
+        self.K = K
+        T_eff = max(1, config.steps_per_sync)
+        if K > 1:   # align fused calls to segment boundaries (forces T > 1)
+            T_eff = -(-max(T_eff, K) // K) * K
+        if config.record_bound_trace:
+            T_eff = max(T_eff, 2)   # traces ride the fused macro path only
+
         # the per-shard engine: supplies the jit-free super-step body and
         # the derived per-shard shapes (B, C, M, S)
-        self._eng = Engine(comp, dataclasses.replace(config, shards=1))
+        self._eng = Engine(comp, dataclasses.replace(
+            config, shards=1, steps_per_sync=T_eff, sync_every=1))
         self.B, self.C, self.M = self._eng.B, self._eng.C, self._eng.M
         self.S, self.k = self._eng.S, config.k
 
@@ -180,11 +218,18 @@ class ShardedEngine:
             self._eng._insert_impl, mesh=self.mesh, in_specs=(spec,) * 6,
             out_specs=(spec,) * 6))
 
-        # fused macro-step (DESIGN.md §13): the per-shard while_loop with
-        # the §4 threshold collective every inner step and the per-shard
-        # continue/stop votes psum-reduced so all shards exit together
+        # fused macro-step (DESIGN.md §13/§14): the per-shard while_loop
+        # with the §4 threshold collective at segment heads (every step at
+        # K == 1), the stale bound in between, and the per-shard
+        # continue/stop votes psum-reduced at segment boundaries so all
+        # shards exit together
         self.T = self._eng.T
         if self.T > 1:
+            stale = make_stale_bound_sync(self.k)
+            rec = bool(config.record_bound_trace)
+            stat_keys = _MACRO_STAT_KEYS + (
+                ("bound_used", "bound_fresh") if rec else ())
+
             def any_reduce(flag):
                 return jax.lax.psum(flag.astype(jnp.int32), "data") > 0
 
@@ -196,16 +241,22 @@ class ShardedEngine:
                         pool_states, pool_prio, pool_ub,
                         result_states, result_keys, t_max,
                         vpq_flag[0], occ0[0],
-                        bound_sync=sync, any_reduce=any_reduce)
-                stats = {name: stats[name].reshape(1)
-                         for name in _MACRO_STAT_KEYS}
+                        bound_sync=sync, any_reduce=any_reduce,
+                        sync_every=self.K, stale_sync=stale,
+                        record_bounds=rec)
+                # scalar per-shard stats -> [1]; [T] traces -> [1, T] so
+                # the mesh axis concatenates them to [shards, T]
+                stats = {name: stats[name].reshape((1, -1))
+                         if name in ("bound_used", "bound_fresh")
+                         else stats[name].reshape(1)
+                         for name in stat_keys}
                 return ps, pp, pu, rs, rk, acc_s, acc_p, acc_u, stats
 
             self._macro_sharded = jax.jit(shard_map_compat(
                 macro_body, mesh=self.mesh,
                 in_specs=(spec,) * 5 + (P(), spec, spec),
                 out_specs=((spec,) * 8 +
-                           ({name: spec for name in _MACRO_STAT_KEYS},))),
+                           ({name: spec for name in stat_keys},))),
                 donate_argnums=donatable_pool_argnums())
 
     # ----------------------------------------------------------------- start
@@ -267,7 +318,8 @@ class ShardedEngine:
             o_per = len(o_p) // shards
 
             st.steps += 1
-            st.syncs += 1
+            st.syncs += 1          # one §4 exchange per unfused step
+            st.host_syncs += 1
             st.expanded += int(stats["expanded"].sum())
             st.candidates += int(stats["created"].sum())
             st.pruned += int(stats["pruned"].sum())
@@ -288,8 +340,16 @@ class ShardedEngine:
             np.asarray([len(v) > 0 for v in st.vpqs]),
             st.pool_occupancy.astype(np.int32))
         stats = jax.device_get(stats)             # each value: [shards]
-        st.steps += int(stats["steps"][0])        # uniform: global exit vote
-        st.syncs += 1
+        n = int(stats["steps"][0])                # uniform: global exit vote
+        st.steps += n
+        # every segment opens with one fresh exchange and runs <= K steps,
+        # and fused calls end on segment boundaries (T is a multiple of K),
+        # so the collectives this call ran are exactly ceil(n / K)
+        st.syncs += -(-n // self.K)
+        st.host_syncs += 1
+        if self.cfg.record_bound_trace:
+            st.bound_used.append(np.asarray(stats["bound_used"])[:, :n])
+            st.bound_fresh.append(np.asarray(stats["bound_fresh"])[:, :n])
         st.expanded += int(stats["expanded"].sum())
         st.candidates += int(stats["created"].sum())
         st.pruned += int(stats["pruned"].sum())
@@ -382,6 +442,16 @@ class ShardedEngine:
             late_pruned=[int(v.total_late_pruned) for v in st.vpqs],
             vpq_backlog=[len(v) for v in st.vpqs],
             pool_occupancy=[int(x) for x in st.pool_occupancy])
+        if self.cfg.record_bound_trace:
+            # [shards, total_inner_steps] traces as per-shard lists
+            used = (np.concatenate(st.bound_used, axis=1) if st.bound_used
+                    else np.zeros((self.shards, 0), np.int32))
+            fresh = (np.concatenate(st.bound_fresh, axis=1)
+                     if st.bound_fresh
+                     else np.zeros((self.shards, 0), np.int32))
+            per_shard["bound_used"] = [list(map(int, row)) for row in used]
+            per_shard["bound_fresh"] = [list(map(int, row))
+                                        for row in fresh]
         for v in st.vpqs:
             v.close()
         return EngineResult(
@@ -392,7 +462,7 @@ class ShardedEngine:
             spilled=sum(per_shard["spilled"]), refilled=st.refilled,
             rebalanced=st.rebalanced,
             late_pruned=sum(per_shard["late_pruned"]), syncs=st.syncs,
-            per_shard=per_shard)
+            host_syncs=st.host_syncs, per_shard=per_shard)
 
     # ------------------------------------------------------------------- run
     def run(self, progress_every: int = 0) -> EngineResult:

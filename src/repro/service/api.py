@@ -107,6 +107,17 @@ class DiscoveryRequest:
     # partial answer can differ across values in spill tie-order.
     # Ignored by `pattern` (host-side aggregate model, no engine loop).
     steps_per_sync: int = 1
+    # staleness-tolerant bound exchange (sharded engine; DESIGN.md §14):
+    # number of shard-local inner steps between §4 bound-exchange
+    # all-gathers.  Between exchanges shards prune against the
+    # last-exchanged global bound (max'd with the fresh local k-th best),
+    # which is only ever looser than per-step exchange — complete runs
+    # are byte-identical for any value (parity-tested), so like
+    # steps_per_sync it is EXCLUDED from the result-cache key but part of
+    # the engine-reuse key (it changes the compiled macro loop).  Ignored
+    # by single-device runs (shards == 1 still accepts it — the 1-shard
+    # engine amortizes its degenerate self-exchange) and by `pattern`.
+    sync_every: int = 1
     # device-mesh sharding (engine workloads; DESIGN.md §11).  shards > 1
     # runs the query on the sharded multi-device engine with batch /
     # pool_capacity as per-shard shapes.  Complete runs are byte-identical
@@ -129,7 +140,7 @@ class DiscoveryRequest:
         try:
             for f in ("k", "batch", "pool_capacity", "step_budget",
                       "candidate_budget", "max_hops", "m_edges", "shards",
-                      "steps_per_sync"):
+                      "steps_per_sync", "sync_every"):
                 if d.get(f) is not None:
                     d[f] = int(d[f])
             for f in ("induced", "use_pallas", "use_cache", "interpret"):
@@ -172,6 +183,9 @@ class DiscoveryRequest:
         if self.steps_per_sync < 1:
             raise ValidationError(
                 f"steps_per_sync must be >= 1, got {self.steps_per_sync}")
+        if self.sync_every < 1:
+            raise ValidationError(
+                f"sync_every must be >= 1, got {self.sync_every}")
         if self.shards > 1 and self.workload == "pattern":
             raise ValidationError(
                 "shards > 1 applies to engine workloads only; pattern "
@@ -268,10 +282,14 @@ class DiscoveryRequest:
         kernel-path knobs ``use_pallas`` / ``interpret``
         (parity-tested to leave results byte-identical *per step*, so
         kernel- and reference-path runs of the same query share one cache
-        entry), and ``steps_per_sync`` (DESIGN.md §13: complete runs are
+        entry), ``steps_per_sync`` (DESIGN.md §13: complete runs are
         byte-identical for any fusion depth and budget truncation lands
         on the same step count, so fused and unfused runs of the same
-        query share one cache entry too).  ``shards`` IS included, like
+        query share one cache entry too), and ``sync_every`` for the same
+        reason (DESIGN.md §14: a stale bound is only ever looser, so
+        complete runs are byte-identical for any exchange cadence — both
+        knobs remain part of the engine-reuse key, which they DO change).
+        ``shards`` IS included, like
         ``batch``/``pool_capacity``:
         complete runs are shard-count invariant, but a run truncated by
         ``step_budget``/``candidate_budget`` is not, and the cache key
@@ -384,6 +402,7 @@ def compile_request(req: DiscoveryRequest, registry: GraphRegistry,
                        pool_capacity=req.pool_capacity,
                        max_steps=req.step_budget, shards=req.shards,
                        steps_per_sync=req.steps_per_sync,
+                       sync_every=req.sync_every,
                        use_pallas=req.use_pallas, interpret=req.interpret)
 
     if req.workload == "clique":

@@ -95,7 +95,8 @@ class EngineQueryTask:
                        expanded=res.expanded, pruned=res.pruned,
                        spilled=res.spilled, refilled=res.refilled,
                        rebalanced=res.rebalanced,
-                       late_pruned=res.late_pruned),
+                       late_pruned=res.late_pruned,
+                       syncs=res.syncs, host_syncs=res.host_syncs),
             terminated=self.terminated or "complete")
         return self._payload
 
@@ -285,16 +286,17 @@ class DiscoveryService:
             return PatternQueryTask(req, graph)
         # the engine key covers only what shapes the compiled step: budgets
         # are enforced per-task (so they're dropped from the spec), while
-        # use_pallas/interpret/steps_per_sync change the compiled step
-        # without changing complete-run results (so they're added back —
-        # all three are deliberately absent from the result-cache key;
-        # shards is already in the spec)
+        # use_pallas/interpret/steps_per_sync/sync_every change the
+        # compiled step without changing complete-run results (so they're
+        # added back — all four are deliberately absent from the
+        # result-cache key; shards is already in the spec)
         engine_spec = req.canonical_spec()
         engine_spec.pop("step_budget", None)
         engine_spec.pop("candidate_budget", None)
         engine_spec["use_pallas"] = req.use_pallas
         engine_spec["interpret"] = req.interpret
         engine_spec["steps_per_sync"] = req.steps_per_sync
+        engine_spec["sync_every"] = req.sync_every
         engine_key = make_cache_key(graph.fingerprint, engine_spec)
         engine = self._engines.get(engine_key)
         if engine is None:

@@ -1,0 +1,335 @@
+"""Staleness-tolerant bound exchange (DESIGN.md §14) property suite.
+
+`sync_every = K` lets the sharded fused loop run K shard-local inner steps
+between §4 `bound_sync` all-gathers, pruning in the interim against
+max(last-exchanged global bound, fresh local k-th best).  Both quantities
+are lower bounds on the fresh global k-th best (result sets only improve,
+and a shard's local results are a subset of the union), so the interim
+threshold is only ever *looser* than the fresh one — pruning stays sound
+and complete runs are byte-identical for any K.  This file carries that
+argument as executable properties:
+
+* fuzzed parity matrix: random graphs × workload × shards × K ×
+  steps_per_sync, byte-identical to the K=1 single-device run;
+* monotonicity: the bound each shard actually pruned with never exceeds
+  the fresh global bound at the same inner step (recorded via the
+  `record_bound_trace` hook), and is exactly the fresh bound at K=1;
+* collective-count regression: `EngineResult.syncs` == ceil(steps / K),
+  so a refactor cannot silently reintroduce per-step all-gathers;
+* budget truncation lands on the same step count for any (K, T) at a
+  fixed shard count, mirroring the PR 5 guarantees;
+* cache keys: `sync_every` is excluded from the service result-cache key
+  but included in the engine-reuse key — both directions asserted.
+
+Shard tiers activate on the visible device count (`_require_devices`), so
+the 2-shard tier runs wherever 2 host devices are forced (the tier-1 CI
+job) and the 8-shard tier in the CI ``distributed`` job; one subprocess
+test keeps a compact 2-shard staleness matrix alive even in a plain
+single-device run.  The matrix is fuzzed with seeded numpy RNG so it
+never depends on hypothesis; an extra hypothesis-driven sweep activates
+when the library is installed (CI).
+"""
+import dataclasses
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.clique import make_clique_computation
+from repro.core.engine import Engine, EngineConfig
+from repro.core.iso import build_iso_index, make_iso_computation
+from repro.core.weighted_clique import make_weighted_clique_computation
+from repro.data.synthetic_graphs import densifying_graph, labeled_graph
+from repro.distributed import ShardedEngine
+from repro.service import (DiscoveryRequest, DiscoveryService,
+                           ValidationError)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # tier-1 containers ship without hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _require_devices(n: int) -> None:
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs >= {n} devices (force host devices with "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count={n})")
+
+
+def _tiers():
+    return tuple(s for s in (1, 2, 8) if s <= len(jax.devices()))
+
+
+def _assert_parity(ref, res, ctx=""):
+    assert np.array_equal(ref.result_keys, res.result_keys), \
+        (ctx, ref.result_keys, res.result_keys)
+    assert np.array_equal(ref.result_states, res.result_states), ctx
+
+
+def _make_workload(kind: str, seed: int):
+    """Seeded random (graph, computation) pair for one workload family."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 72))
+    m = int(rng.integers(2 * n, 5 * n))
+    if kind == "clique":
+        return make_clique_computation(densifying_graph(n, m, seed=seed))
+    if kind == "weighted-clique":
+        g = densifying_graph(n, m, seed=seed)
+        return make_weighted_clique_computation(
+            g, rng.integers(1, 20, g.n))
+    assert kind == "iso"
+    gl = labeled_graph(n=n, m=m, n_labels=3, seed=seed)
+    return make_iso_computation(gl, [(0, 1), (1, 2), (0, 2)], [1, 1, 1],
+                                build_iso_index(gl, max_hops=2))
+
+
+_CFG = EngineConfig(k=3, batch=8, pool_capacity=64, max_steps=50_000)
+
+
+# ----------------------------------------------------- fuzzed parity matrix
+@pytest.mark.parametrize("kind,seed", [
+    ("clique", 11), ("clique", 12), ("iso", 13), ("weighted-clique", 14)])
+def test_stale_parity_fuzzed(kind, seed):
+    """Complete runs are byte-identical to the K=1 single-device run for
+    every (shards, K, steps_per_sync) combination the device count
+    allows — the DESIGN.md §14 soundness claim, end to end."""
+    comp = _make_workload(kind, seed)
+    ref = Engine(comp, _CFG).run()
+    for shards in _tiers():
+        for K in (1, 2, 4, 8):
+            for T in (1, 4):
+                res = ShardedEngine(comp, dataclasses.replace(
+                    _CFG, shards=shards, sync_every=K,
+                    steps_per_sync=T)).run()
+                _assert_parity(ref, res, (kind, shards, K, T))
+
+
+# --------------------------------------------- monotonicity: stale <= fresh
+@pytest.mark.parametrize("shards", [1, 2, 8])
+@pytest.mark.parametrize("K", [1, 4])
+def test_stale_bound_never_exceeds_fresh(shards, K):
+    """The bound a shard actually prunes with is (a) never above the fresh
+    global bound a per-step exchange would have produced at the same
+    inner step — stale means *looser*, never tighter — and (b) exactly
+    the fresh bound at K=1.  Fresh bounds are monotone nondecreasing,
+    which is what makes (a) sufficient for soundness."""
+    _require_devices(shards)
+    comp = _make_workload("clique", 21)
+    res = ShardedEngine(comp, dataclasses.replace(
+        _CFG, shards=shards, sync_every=K, steps_per_sync=4,
+        record_bound_trace=True)).run()
+    used = np.asarray(res.per_shard["bound_used"])
+    fresh = np.asarray(res.per_shard["bound_fresh"])
+    assert used.shape == (shards, res.steps)
+    assert fresh.shape == (shards, res.steps)
+    assert np.all(used <= fresh)
+    assert np.all(np.diff(fresh, axis=1) >= 0)   # fresh bound is monotone
+    if K == 1:
+        np.testing.assert_array_equal(used, fresh)
+    else:
+        # at least one exchange boundary actually ran with a fresh bound
+        assert np.any(used == fresh)
+
+
+# ------------------------------------------------ collective-count contract
+@pytest.mark.parametrize("shards", [1, 2, 8])
+def test_syncs_count_is_ceil_steps_over_k(shards):
+    """syncs == ceil(steps / K) exactly: the observable proof that the
+    fleet exchanges bounds every K-th inner step and not once per step.
+    Guards against a refactor quietly moving bound_sync back into the
+    per-step path."""
+    _require_devices(shards)
+    comp = _make_workload("clique", 31)
+    for K in (1, 2, 4, 8):
+        for T in (1, 4):
+            res = ShardedEngine(comp, dataclasses.replace(
+                _CFG, shards=shards, sync_every=K,
+                steps_per_sync=T)).run()
+            assert res.syncs == math.ceil(res.steps / K), \
+                (shards, K, T, res.steps, res.syncs)
+            assert res.host_syncs <= res.syncs
+
+
+def test_single_device_engine_has_no_collectives():
+    """The plain Engine never exchanges bounds: syncs stays 0 (host
+    round-trips are reported separately as host_syncs)."""
+    comp = _make_workload("clique", 31)
+    for T in (1, 4):
+        res = Engine(comp, dataclasses.replace(
+            _CFG, steps_per_sync=T)).run()
+        assert res.syncs == 0
+        assert res.host_syncs > 0
+
+
+# ------------------------------------------------- budget truncation
+@pytest.mark.parametrize("shards", [1, 2, 8])
+def test_budget_truncates_identically_across_k(shards):
+    """max_steps lands on exactly the same step count for any (K, T) at a
+    fixed shard count, and the truncated result arrays are identical —
+    sync_every never changes what a budgeted run returns."""
+    _require_devices(shards)
+    comp = _make_workload("clique", 41)
+    full = ShardedEngine(comp, dataclasses.replace(
+        _CFG, shards=shards)).run()
+    budget = max(2, full.steps // 2)
+    ref = None
+    for K in (1, 2, 4):
+        for T in (1, 4):
+            res = ShardedEngine(comp, dataclasses.replace(
+                _CFG, shards=shards, sync_every=K, steps_per_sync=T,
+                max_steps=budget)).run()
+            assert res.steps == budget, (K, T, res.steps, budget)
+            if ref is None:
+                ref = res
+            else:
+                _assert_parity(ref, res, (shards, K, T))
+
+
+def test_service_step_budget_with_sync_every():
+    """step_budget through the service layer truncates at the same step
+    count for any K, and the syncs/host_syncs accounting reaches the
+    response stats."""
+    g = densifying_graph(64, 256, seed=5)
+    svc = DiscoveryService()
+    svc.register_graph("g", g)
+    for K in (1, 4):
+        resp = svc.query(DiscoveryRequest(
+            graph="g", workload="clique", k=3, batch=8, pool_capacity=64,
+            step_budget=6, sync_every=K, steps_per_sync=4,
+            use_cache=False))
+        assert resp.status == "ok", resp.error
+        assert resp.terminated == "step_budget"
+        assert resp.stats["steps"] == 6, (K, resp.stats["steps"])
+        assert "syncs" in resp.stats and "host_syncs" in resp.stats
+        assert resp.stats["syncs"] == 0   # single-device: no collectives
+
+
+# --------------------------------------------------------------- cache keys
+def test_sync_every_excluded_from_result_cache_key():
+    """Direction 1: requests differing only in sync_every share one
+    result-cache entry (complete runs are byte-identical, so caching
+    across K is sound and saves the recompute)."""
+    r1 = DiscoveryRequest(graph="g", workload="clique", k=3)
+    r2 = dataclasses.replace(r1, sync_every=4)
+    assert r1.canonical_spec() == r2.canonical_spec()
+    svc = DiscoveryService()
+    svc.register_graph("g", densifying_graph(48, 160, seed=3))
+    first = svc.query(DiscoveryRequest(graph="g", workload="clique", k=3))
+    hit = svc.query(DiscoveryRequest(graph="g", workload="clique", k=3,
+                                     sync_every=8))
+    assert first.status == "ok" and hit.status == "ok"
+    assert not first.cached and hit.cached
+    assert first.result_keys == hit.result_keys
+
+
+def test_sync_every_included_in_engine_reuse_key():
+    """Direction 2: sync_every changes the compiled fused program, so
+    requests differing only in K must NOT share a compiled engine."""
+    svc = DiscoveryService()
+    svc.register_graph("g", densifying_graph(48, 160, seed=3))
+    base = dict(graph="g", workload="clique", k=3, use_cache=False)
+    svc.query(DiscoveryRequest(**base))
+    assert len(svc._engines) == 1
+    svc.query(DiscoveryRequest(**base))            # same K: engine reused
+    assert len(svc._engines) == 1
+    svc.query(DiscoveryRequest(**base, sync_every=4))
+    assert len(svc._engines) == 2                  # new K: new engine
+    svc.query(DiscoveryRequest(**base, sync_every=4))
+    assert len(svc._engines) == 2
+
+
+# ------------------------------------------------------- request validation
+def test_sync_every_validated_and_coerced():
+    from repro.service.api import GraphRegistry
+    reg = GraphRegistry()
+    reg.register("g", densifying_graph(32, 64, seed=0))
+    with pytest.raises(ValidationError, match="sync_every"):
+        DiscoveryRequest(graph="g", workload="clique", k=1,
+                         sync_every=0).validate(reg)
+    req = DiscoveryRequest.from_dict(
+        dict(graph="g", workload="clique", k=1, sync_every="4"))
+    assert req.sync_every == 4
+    with pytest.raises(ValueError):
+        ShardedEngine(make_clique_computation(densifying_graph(
+            32, 64, seed=0)), EngineConfig(k=1, sync_every=0))
+
+
+# ------------------------------------- subprocess tier: 2 shards, 1 device
+_STALE_PROG = """
+    import dataclasses, math
+    import numpy as np
+    from repro.core.clique import make_clique_computation
+    from repro.core.engine import Engine, EngineConfig
+    from repro.core.iso import build_iso_index, make_iso_computation
+    from repro.core.weighted_clique import make_weighted_clique_computation
+    from repro.data.synthetic_graphs import densifying_graph, labeled_graph
+    from repro.distributed import ShardedEngine
+
+    cfg = EngineConfig(k=3, batch=8, pool_capacity=64, max_steps=50_000)
+    rng = np.random.default_rng(51)
+    g = densifying_graph(56, 220, seed=51)
+    gl = labeled_graph(n=56, m=190, n_labels=3, seed=52)
+    comps = [
+        ("clique", make_clique_computation(g)),
+        ("weighted", make_weighted_clique_computation(
+            g, rng.integers(1, 20, g.n))),
+        ("iso", make_iso_computation(
+            gl, [(0, 1), (1, 2), (0, 2)], [1, 1, 1],
+            build_iso_index(gl, max_hops=2))),
+    ]
+    for name, comp in comps:
+        ref = Engine(comp, cfg).run()
+        for K in (2, 8):
+            res = ShardedEngine(comp, dataclasses.replace(
+                cfg, shards=2, sync_every=K, steps_per_sync=4)).run()
+            assert np.array_equal(ref.result_keys, res.result_keys), \\
+                (name, K)
+            assert np.array_equal(ref.result_states, res.result_states), \\
+                (name, K)
+            assert res.syncs == math.ceil(res.steps / K), (name, K)
+        print(f"STALE-2SHARD-OK {name}", flush=True)
+"""
+
+
+def test_stale_parity_two_shards_subprocess():
+    """Keeps the 2-shard staleness matrix exercised even when the calling
+    interpreter has a single device (plain tier-1): re-runs a compact
+    workload × K parity + sync-count program under 2 forced host
+    devices."""
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=2",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_STALE_PROG)],
+        capture_output=True, text=True, timeout=420, env=env)
+    for name in ("clique", "weighted", "iso"):
+        assert f"STALE-2SHARD-OK {name}" in res.stdout, \
+            (res.stdout, res.stderr[-3000:])
+
+
+# ------------------------------------------------ hypothesis sweep (CI only)
+if HAVE_HYPOTHESIS:
+    settings.register_profile("stale", max_examples=10, deadline=None)
+    settings.load_profile("stale")
+
+    @given(seed=st.integers(0, 2 ** 16), K=st.sampled_from([2, 3, 5, 8]),
+           T=st.sampled_from([1, 3, 4]))
+    def test_stale_parity_hypothesis(seed, K, T):
+        """Hypothesis-driven corner of the matrix: arbitrary seeds and
+        non-power-of-two cadences on whatever shard tiers exist."""
+        comp = _make_workload("clique", seed)
+        ref = Engine(comp, _CFG).run()
+        for shards in _tiers():
+            res = ShardedEngine(comp, dataclasses.replace(
+                _CFG, shards=shards, sync_every=K,
+                steps_per_sync=T)).run()
+            _assert_parity(ref, res, (seed, shards, K, T))
