@@ -1,5 +1,4 @@
-"""Benchmark harness: one benchmark per paper table/figure + the roofline
-table from the dry-run artifacts (when present).
+"""Benchmark harness: one benchmark per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--fast]
 """
@@ -11,9 +10,9 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import bench_clique, bench_distributed, bench_engine, \
-    bench_iso, bench_k, bench_labeled, bench_pattern, bench_service, \
-    bench_vpq  # noqa: E402
+from benchmarks import bench_checkpoint, bench_clique, bench_distributed, \
+    bench_engine, bench_iso, bench_k, bench_labeled, bench_pattern, \
+    bench_service, bench_vpq  # noqa: E402
 
 
 def main():
@@ -40,7 +39,8 @@ def main():
                       ("service (§9)", bench_service),
                       ("distributed (§11)", bench_distributed),
                       ("labeled (§12)", bench_labeled),
-                      ("engine macro-step (§13)", bench_engine)]:
+                      ("engine macro-step (§13)", bench_engine),
+                      ("checkpoint (§15)", bench_checkpoint)]:
         if args.only and args.only not in name:
             continue
         print(f"\n=== {name} ===")
@@ -60,16 +60,6 @@ def main():
                            for name in results}},
                       f, indent=1, default=str)
         print(f"per-benchmark timings written to {args.json}")
-
-    # roofline table if dry-run artifacts exist
-    try:
-        from repro.analysis.roofline import format_markdown, table
-        rows = table("single")
-        if rows:
-            print("\n=== roofline (single-pod dry-run) ===")
-            print(format_markdown(rows))
-    except Exception as exc:  # noqa: BLE001
-        print(f"(roofline table unavailable: {exc})")
     print("\nbenchmarks complete.")
 
 

@@ -1,25 +1,33 @@
-"""Sharded checkpointing with atomic commit, async writes, and elastic
-restore.
+"""Durable engine checkpoints with atomic commit and async writes
+(DESIGN.md §15).
 
 Layout (one directory per step)::
 
     <dir>/step_000120/
-        manifest.json        # step, leaf names/shapes/dtypes, mesh shape
+        manifest.json        # step, leaf names/shapes/dtypes, extra payload
         <leaf-name>.npy      # one file per pytree leaf
-        COMMITTED            # written last — partial checkpoints are ignored
+        vpq/...              # side files written by the capture hook
+        COMMITTED            # written last inside the tmp dir
 
-Writes go to ``step_N.tmp`` and are renamed into place after the commit
-marker, so a crash mid-save never corrupts the latest checkpoint (restart
-just picks the newest *committed* step).  Saving runs on a background
-thread (async checkpointing — training continues while the previous step
-flushes); ``wait()`` joins it.
+Writes go to ``step_N.tmp`` and are renamed into place only after every
+file — leaves, side files, manifest, commit marker — exists, so a crash at
+*any* moment never corrupts a restorable step: restart just picks the
+newest directory whose ``COMMITTED`` marker exists (``committed_steps()``
+skips ``.tmp`` and uncommitted dirs).  The rename is the single commit
+point (:meth:`_commit` — factored out so the crash-injection harness can
+kill the process between tmp-write and rename and prove exactly that).
 
-Elastic restore: leaves are stored as full (host-replicated) arrays, so a
-checkpoint written on one mesh restores onto any other mesh — the caller
-re-shards by passing the new shardings (``restore(..., shardings=...)``).
-Production multi-host would write per-shard files via
-``jax.experimental.multihost_utils``; the format keeps that door open via
-the manifest's ``mesh`` field.
+Saving is split in two so the engine can keep mutating after ``save()``
+returns:
+
+* the **capture hook** runs synchronously on the caller's thread —
+  anything that references live, mutable engine structures (the VPQ's
+  spill runs, which the engine deletes as they exhaust) must be captured
+  *now*, into the tmp dir (``capture(tmp_dir) -> dict``); its return value
+  lands in the manifest's ``extra`` field;
+* the **leaf writes** (already ``device_get`` host copies) plus manifest
+  and commit run on a background thread (async checkpointing — the run
+  continues while the previous step flushes); ``wait()`` joins it.
 """
 from __future__ import annotations
 
@@ -27,7 +35,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 import jax
@@ -55,26 +63,39 @@ class CheckpointManager:
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        # a crash between tmp-write and rename strands a ``.tmp`` dir;
+        # it is uncommitted garbage by definition (the rename is the
+        # commit point), so sweep it on attach
+        for d in os.listdir(directory):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, d),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, tree: Any, blocking: bool = False):
-        """Snapshot to host then write asynchronously."""
+    def save(self, step: int, tree: Any, blocking: bool = False,
+             capture: Optional[Callable[[str], Dict[str, Any]]] = None):
+        """Snapshot ``tree`` to host, run ``capture`` synchronously into the
+        tmp dir, then write and commit asynchronously."""
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         self.wait()
-        self._thread = threading.Thread(
-            target=self._write, args=(step, host_tree), daemon=True)
-        self._thread.start()
-        if blocking:
-            self.wait()
-
-    def _write(self, step: int, host_tree):
-        names = _leaf_names(host_tree)
-        leaves = jax.tree.leaves(host_tree)
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        manifest = {"step": step, "leaves": []}
+        # synchronous: side files must reference engine structures *before*
+        # the caller mutates them again (e.g. VPQ runs deleted on exhaust)
+        extra = capture(tmp) if capture is not None else None
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree, tmp, final, extra),
+            daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _write(self, step: int, host_tree, tmp: str, final: str, extra):
+        names = _leaf_names(host_tree)
+        leaves = jax.tree.leaves(host_tree)
+        manifest = {"step": step, "leaves": [], "extra": extra}
         for name, leaf in zip(names, leaves):
             np.save(os.path.join(tmp, name + ".npy"), leaf)
             manifest["leaves"].append(
@@ -84,9 +105,14 @@ class CheckpointManager:
             json.dump(manifest, f)
         with open(os.path.join(tmp, "COMMITTED"), "w") as f:
             f.write("ok")
+        self._commit(tmp, final)
+        self._gc()
+
+    def _commit(self, tmp: str, final: str):
+        """The atomic commit point: everything before this is invisible to
+        ``committed_steps()``; after the rename the step is durable."""
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)
-        self._gc()
 
     def _gc(self):
         steps = sorted(self.committed_steps())
@@ -111,19 +137,25 @@ class CheckpointManager:
         steps = self.committed_steps()
         return steps[-1] if steps else None
 
-    def restore(self, like: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Any:
-        """Restore into the structure of ``like``; optionally re-shard onto a
-        (possibly different — elastic) mesh via ``shardings``."""
+    def path(self, step: int) -> str:
+        """Directory of a committed step (the capture hook's side files
+        live under it)."""
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def read_manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(self.path(step), "manifest.json")) as f:
+            return json.load(f)
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Any:
+        """Restore the leaf arrays into the structure of ``like``."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        path = self.path(step)
         names = _leaf_names(like)
         leaves = [np.load(os.path.join(path, n + ".npy")) for n in names]
         treedef = jax.tree.structure(like)
-        tree = jax.tree.unflatten(treedef, leaves)
-        if shardings is not None:
-            tree = jax.tree.map(
-                lambda x, s: jax.device_put(x, s), tree, shardings)
-        return tree
+        return jax.tree.unflatten(treedef, leaves)

@@ -41,6 +41,7 @@ the ``C×S`` pool is updated in place instead of copied every step.
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import Optional
 
@@ -50,6 +51,11 @@ import jax.numpy as jnp
 
 from .api import NEG, SubgraphComputation
 from .vpq import VirtualPriorityQueue
+
+# EngineState counters checkpointed verbatim (DESIGN.md §15)
+_CKPT_SCALARS = ("steps", "candidates", "expanded", "pruned", "refilled",
+                 "syncs", "host_syncs", "threshold", "pool_occupancy",
+                 "done")
 
 
 def donatable_pool_argnums():
@@ -122,6 +128,20 @@ class EngineConfig:
     # Costs one extra all-gather per stale step — never enable outside
     # tests.
     record_bound_trace: bool = False
+    # durable runs (DESIGN.md §15): with checkpoint_every = N > 0 and a
+    # checkpoint_dir, Engine.run()/ShardedEngine.run() persist the full
+    # engine state (pool, results, VPQ runs, counters) through
+    # CheckpointManager's atomic-commit protocol at the first host-sync
+    # boundary every >= N steps, and Engine.resume() reconstructs an
+    # EngineState whose continued run is byte-identical to an
+    # uninterrupted one (same top-k, same step trajectory — the same
+    # invariant discipline as shards/T/K, crash-proved in
+    # tests/test_fault_injection.py).  Checkpoints are pure observers of
+    # host-sync state, so like the kernel knobs both fields are excluded
+    # from the service result-cache key (but included in the engine-reuse
+    # key: tasks sharing an engine share its checkpoint policy).
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
     # kernel-path knobs (DESIGN.md §10): a declarative record consumed at
     # computation-construction time (service.api.compile_request reads
     # them when calling make_*_computation) — NOT by the engine loop,
@@ -679,15 +699,95 @@ class Engine:
             refilled=st.refilled, late_pruned=st.vpq.total_late_pruned,
             syncs=st.syncs, host_syncs=st.host_syncs)
 
+    # ------------------------------------------------------- checkpointing
+    def _ckpt_arrays(self, st: EngineState) -> dict:
+        return dict(pool_states=st.pool_states, pool_prio=st.pool_prio,
+                    pool_ub=st.pool_ub, result_states=st.result_states,
+                    result_keys=st.result_keys)
+
+    def save_checkpoint(self, mgr, st: EngineState,
+                        blocking: bool = False) -> None:
+        """Persist ``st`` through ``mgr``'s atomic-commit protocol
+        (DESIGN.md §15).  The VPQ capture (array snapshots + hardlinks of
+        disk run files) runs synchronously before this returns, so the
+        engine may keep mutating — including deleting exhausted spill
+        runs — while the leaf arrays flush on the writer thread.  Pure
+        observer: saving never perturbs the step trajectory."""
+        scalars = {name: getattr(st, name) for name in _CKPT_SCALARS}
+
+        def capture(tmp_dir: str) -> dict:
+            vpq = st.vpq.snapshot(os.path.join(tmp_dir, "vpq"))
+            return {"kind": "engine", "scalars": scalars, "vpq": vpq}
+
+        mgr.save(st.steps, self._ckpt_arrays(st), blocking=blocking,
+                 capture=capture)
+
+    def resume(self, source, step: Optional[int] = None) -> EngineState:
+        """Reconstruct an :class:`EngineState` from a committed checkpoint
+        (a directory path or a :class:`CheckpointManager`); its continued
+        run is byte-identical to an uninterrupted one.  Spill files
+        referenced by the checkpoint are re-linked into the live spill
+        dir (``cfg.spill_dir`` or a fresh temp dir), so the checkpoint
+        remains restorable any number of times."""
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = (source if isinstance(source, CheckpointManager)
+               else CheckpointManager(source))
+        manifest = mgr.read_manifest(step)
+        step = manifest["step"]
+        extra = manifest["extra"]
+        if extra is None or extra.get("kind") != "engine":
+            raise ValueError(
+                f"step {step} in {mgr.dir} is not an engine checkpoint")
+        like = {name: np.zeros(
+            [int(s) for s in leaf["shape"]], np.dtype(leaf["dtype"]))
+            for leaf in manifest["leaves"]
+            for name in [leaf["name"]]}
+        tree = mgr.restore(like, step=step)
+        vpq = VirtualPriorityQueue.restore(
+            extra["vpq"], os.path.join(mgr.path(step), "vpq"),
+            spill_dir=self.cfg.spill_dir)
+        return EngineState(
+            pool_states=jnp.asarray(tree["pool_states"]),
+            pool_prio=jnp.asarray(tree["pool_prio"]),
+            pool_ub=jnp.asarray(tree["pool_ub"]),
+            result_states=jnp.asarray(tree["result_states"]),
+            result_keys=jnp.asarray(tree["result_keys"]),
+            vpq=vpq, **extra["scalars"])
+
     # ------------------------------------------------------------------- run
-    def run(self, progress_every: int = 0) -> EngineResult:
-        st = self.start()
+    def run(self, progress_every: int = 0,
+            resume: bool = False) -> EngineResult:
+        """Run to completion (or ``max_steps``).  With
+        ``cfg.checkpoint_every > 0`` and a ``cfg.checkpoint_dir``, the
+        state is persisted at the first host-sync boundary every
+        ``checkpoint_every`` steps; ``resume=True`` continues from the
+        newest committed step there (fresh start if none committed)."""
+        mgr = None
+        if self.cfg.checkpoint_dir and (self.cfg.checkpoint_every > 0
+                                        or resume):
+            from repro.checkpoint.manager import CheckpointManager
+            mgr = CheckpointManager(self.cfg.checkpoint_dir)
+        st = None
+        if resume and mgr is not None and mgr.latest_step() is not None:
+            st = self.resume(mgr)
+        if st is None:
+            st = self.start()
+        every = self.cfg.checkpoint_every
+        last_ckpt = st.steps
         while not st.done and st.steps < self.cfg.max_steps:
             self.step(st, max_inner=self.cfg.max_steps - st.steps)
             if progress_every and st.steps % progress_every == 0:
                 print(f"[{self.comp.name}] step={st.steps} "
                       f"occ={st.pool_occupancy} vpq={len(st.vpq)} "
                       f"thr={st.threshold} cand={st.candidates}")
+            if mgr is not None and every > 0 and \
+                    st.steps - last_ckpt >= every:
+                self.save_checkpoint(mgr, st)
+                last_ckpt = st.steps
+        if mgr is not None and every > 0 and st.steps > last_ckpt:
+            self.save_checkpoint(mgr, st)   # final state is restorable too
+        if mgr is not None:
+            mgr.wait()
         return self.finalize(st)
 
 

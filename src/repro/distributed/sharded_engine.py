@@ -464,9 +464,88 @@ class ShardedEngine:
             late_pruned=sum(per_shard["late_pruned"]), syncs=st.syncs,
             host_syncs=st.host_syncs, per_shard=per_shard)
 
+    # ------------------------------------------------------- checkpointing
+    _CKPT_SCALARS = ("steps", "candidates", "expanded", "pruned", "refilled",
+                     "rebalanced", "syncs", "host_syncs", "threshold", "done")
+
+    def save_checkpoint(self, mgr, st: ShardedEngineState,
+                        blocking: bool = False) -> None:
+        """Persist a sharded state: one manifest covers every shard, with
+        per-shard VPQ snapshots under ``vpq/shard{i}`` subdirs of the step
+        directory (DESIGN.md §15).  ``record_bound_trace`` journals are a
+        test hook and are not checkpointed."""
+        scalars = {name: getattr(st, name) for name in self._CKPT_SCALARS}
+        scalars["pool_occupancy"] = [int(x) for x in st.pool_occupancy]
+
+        def capture(tmp_dir: str) -> dict:
+            vpqs = [v.snapshot(os.path.join(tmp_dir, "vpq", f"shard{i}"))
+                    for i, v in enumerate(st.vpqs)]
+            return {"kind": "sharded_engine", "shards": self.shards,
+                    "scalars": scalars, "vpqs": vpqs}
+
+        tree = dict(pool_states=st.pool_states, pool_prio=st.pool_prio,
+                    pool_ub=st.pool_ub, result_states=st.result_states,
+                    result_keys=st.result_keys)
+        mgr.save(st.steps, tree, blocking=blocking, capture=capture)
+
+    def resume(self, source,
+               step: Optional[int] = None) -> ShardedEngineState:
+        """Rebuild a :class:`ShardedEngineState` whose continued run is
+        byte-identical to an uninterrupted one.  The checkpoint must have
+        been written at the same shard count."""
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = (source if isinstance(source, CheckpointManager)
+               else CheckpointManager(source))
+        manifest = mgr.read_manifest(step)
+        step = manifest["step"]
+        extra = manifest["extra"]
+        if extra is None or extra.get("kind") != "sharded_engine":
+            raise ValueError(
+                f"step {step} in {mgr.dir} is not a sharded-engine "
+                f"checkpoint")
+        if extra["shards"] != self.shards:
+            raise ValueError(
+                f"checkpoint written at shards={extra['shards']}, engine "
+                f"configured with shards={self.shards}")
+        like = {name: np.zeros(
+            [int(s) for s in leaf["shape"]], np.dtype(leaf["dtype"]))
+            for leaf in manifest["leaves"]
+            for name in [leaf["name"]]}
+        tree = mgr.restore(like, step=step)
+        vpqs = []
+        for i, vman in enumerate(extra["vpqs"]):
+            sub = (os.path.join(self.cfg.spill_dir, f"shard{i}")
+                   if self.cfg.spill_dir is not None else None)
+            vpqs.append(VirtualPriorityQueue.restore(
+                vman, os.path.join(mgr.path(step), "vpq", f"shard{i}"),
+                spill_dir=sub))
+        scalars = dict(extra["scalars"])
+        occ = np.asarray(scalars.pop("pool_occupancy"), np.int64)
+        return ShardedEngineState(
+            pool_states=jnp.asarray(tree["pool_states"]),
+            pool_prio=jnp.asarray(tree["pool_prio"]),
+            pool_ub=jnp.asarray(tree["pool_ub"]),
+            result_states=jnp.asarray(tree["result_states"]),
+            result_keys=jnp.asarray(tree["result_keys"]),
+            vpqs=vpqs, pool_occupancy=occ, **scalars)
+
     # ------------------------------------------------------------------- run
-    def run(self, progress_every: int = 0) -> EngineResult:
-        st = self.start()
+    def run(self, progress_every: int = 0,
+            resume: bool = False) -> EngineResult:
+        """Run to completion, with the same periodic-checkpoint / resume
+        contract as :meth:`repro.core.engine.Engine.run`."""
+        mgr = None
+        if self.cfg.checkpoint_dir and (self.cfg.checkpoint_every > 0
+                                        or resume):
+            from repro.checkpoint.manager import CheckpointManager
+            mgr = CheckpointManager(self.cfg.checkpoint_dir)
+        st = None
+        if resume and mgr is not None and mgr.latest_step() is not None:
+            st = self.resume(mgr)
+        if st is None:
+            st = self.start()
+        every = self.cfg.checkpoint_every
+        last_ckpt = st.steps
         while not st.done and st.steps < self.cfg.max_steps:
             self.step(st, max_inner=self.cfg.max_steps - st.steps)
             if progress_every and st.steps % progress_every == 0:
@@ -474,4 +553,12 @@ class ShardedEngine:
                       f"occ={st.pool_occupancy.tolist()} "
                       f"vpq={[len(v) for v in st.vpqs]} "
                       f"thr={st.threshold} cand={st.candidates}")
+            if mgr is not None and every > 0 and \
+                    st.steps - last_ckpt >= every:
+                self.save_checkpoint(mgr, st)
+                last_ckpt = st.steps
+        if mgr is not None and every > 0 and st.steps > last_ckpt:
+            self.save_checkpoint(mgr, st)
+        if mgr is not None:
+            mgr.wait()
         return self.finalize(st)

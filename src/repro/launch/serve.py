@@ -1,79 +1,33 @@
-"""Serving drivers.
+"""Discovery serving driver (DESIGN.md §9): JSONL requests in, JSON
+responses out, executed by :class:`repro.service.DiscoveryService`
+(round-robin scheduler + result cache) against a registry of demo graphs
+(``demo-social`` unlabeled, ``demo-citeseer`` vertex-labeled,
+``demo-attributed`` vertex + edge labels).  Label-constrained requests
+(DESIGN.md §12) add a ``label_predicate``, e.g.::
 
-Two modes share this entry point:
+    {"graph": "demo-attributed", "workload": "iso", "k": 3,
+     "q_edges": [[0, 1], [1, 2], [0, 2]], "q_labels": [1, 1, 1],
+     "label_predicate": {"vertex_any_of": [1, 2],
+                         "q_any_of": [[1, 2], [1, 2], [1, 2]],
+                         "edge_any_of": [0]}}
 
-* ``--mode lm`` (default) — batched LM serving: prefill + decode loop with
-  a KV cache.  Smoke-scale on CPU; the full-scale variants are the
-  ``prefill_32k`` / ``decode_32k`` / ``long_500k`` dry-run cells.
-* ``--mode discovery`` — the multi-query subgraph-discovery request loop
-  (DESIGN.md §9): JSONL requests in, JSON responses out, executed by
-  :class:`repro.service.DiscoveryService` (round-robin scheduler + result
-  cache) against a registry of demo graphs (``demo-social`` unlabeled,
-  ``demo-citeseer`` vertex-labeled, ``demo-attributed`` vertex + edge
-  labels).  Label-constrained requests (DESIGN.md §12) add a
-  ``label_predicate``, e.g.::
+Durable runs (DESIGN.md §15): requests carrying ``checkpoint_every`` /
+``checkpoint_dir`` persist their engine state as they run, and a killed
+serve process restarts with ``--resume`` to continue every such request
+from its newest committed step — the resumed answers are byte-identical
+to an uninterrupted run's.  ``--heartbeat PATH`` touches a liveness file
+after every flushed batch so an external supervisor can detect a hung or
+killed loop (:class:`repro.runtime.fault_tolerance.Heartbeat`) and
+trigger exactly that restart.
 
-      {"graph": "demo-attributed", "workload": "iso", "k": 3,
-       "q_edges": [[0, 1], [1, 2], [0, 2]], "q_labels": [1, 1, 1],
-       "label_predicate": {"vertex_any_of": [1, 2],
-                           "q_any_of": [[1, 2], [1, 2], [1, 2]],
-                           "edge_any_of": [0]}}
-
-  Request schema: docs/API.md; per-workload walkthroughs:
-  docs/WORKLOADS.md.
+Request schema: docs/API.md; per-workload walkthroughs: docs/WORKLOADS.md.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
-import time
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_arch
-from repro.models import transformer as T
-
-
-def serve(arch_name: str = "gemma2-9b", batch: int = 4, prompt_len: int = 32,
-          decode_steps: int = 32, max_seq: int = 128, seed: int = 0,
-          greedy: bool = True):
-    arch = get_arch(arch_name)
-    assert arch.family == "lm", "serving driver targets the LM archs"
-    cfg = arch.make_smoke_cfg()
-    rng = jax.random.PRNGKey(seed)
-    params = T.init_params(cfg, rng)
-    prompts = jax.random.randint(rng, (batch, prompt_len), 0, cfg.vocab)
-
-    prefill_fn = jax.jit(lambda p, t: T.prefill(cfg, p, t))
-    decode_fn = jax.jit(
-        lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos))
-
-    t0 = time.time()
-    logits, cache = prefill_fn(params, prompts)
-    # pad the cache to max_seq
-    cache = {k: jnp.zeros(
-        (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
-        jnp.bfloat16).at[:, :, :prompt_len].set(v)
-        for k, v in cache.items()}
-    prefill_s = time.time() - t0
-
-    tokens = jnp.argmax(logits, -1).astype(jnp.int32)
-    generated = [tokens]
-    t0 = time.time()
-    for i in range(decode_steps - 1):
-        logits, cache = decode_fn(params, cache, tokens,
-                                  jnp.int32(prompt_len + i))
-        tokens = jnp.argmax(logits, -1).astype(jnp.int32)
-        generated.append(tokens)
-    decode_s = time.time() - t0
-    out = jnp.stack(generated, axis=1)
-    return dict(tokens=np.asarray(out), prefill_s=prefill_s,
-                decode_s=decode_s,
-                decode_tok_s=batch * (decode_steps - 1) / max(decode_s,
-                                                              1e-9))
 
 
 def make_demo_registry():
@@ -97,13 +51,17 @@ def make_demo_registry():
 
 
 def serve_discovery(lines=None, out=None, slice_steps: int = 1,
-                    batch_size: int = 8):
+                    batch_size: int = 8, resume: bool = False,
+                    heartbeat: str = None):
     """Minimal request loop: one JSON request per input line, one JSON
     response per output line (order-preserving).
 
     Requests are grouped into batches of ``batch_size`` and each batch's
     cache misses run concurrently under the round-robin scheduler; repeats
-    within and across batches hit the result cache.
+    within and across batches hit the result cache.  ``resume=True``
+    (the ``--resume`` restart path) forces every checkpointed request to
+    continue from its newest committed step instead of starting over;
+    ``heartbeat`` names a liveness file beaten after every flushed batch.
     """
     from repro.service import (DiscoveryRequest, DiscoveryResponse,
                                DiscoveryService)
@@ -112,8 +70,13 @@ def serve_discovery(lines=None, out=None, slice_steps: int = 1,
                            slice_steps=slice_steps)
     lines = sys.stdin if lines is None else lines
     out = sys.stdout if out is None else out
+    hb = None
+    if heartbeat:
+        from repro.runtime.fault_tolerance import Heartbeat
+        hb = Heartbeat(heartbeat)
 
     batch = []
+    flushed = [0]
 
     def flush():
         if not batch:
@@ -123,6 +86,9 @@ def serve_discovery(lines=None, out=None, slice_steps: int = 1,
             # they are produced, not when the process exits
             print(resp.to_json(), file=out, flush=True)
         batch.clear()
+        flushed[0] += 1
+        if hb is not None:
+            hb.beat(flushed[0])
 
     for line in lines:
         line = line.strip()
@@ -132,6 +98,8 @@ def serve_discovery(lines=None, out=None, slice_steps: int = 1,
         try:
             d = json.loads(line)
             req = DiscoveryRequest.from_dict(d)
+            if resume and req.checkpoint_dir:
+                req = dataclasses.replace(req, resume=True)
         except (ValueError, TypeError) as e:
             flush()   # keep responses in request order
             d = d if isinstance(d, dict) else {}
@@ -150,30 +118,28 @@ def serve_discovery(lines=None, out=None, slice_steps: int = 1,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["lm", "discovery"], default="lm")
-    ap.add_argument("--arch", default="gemma2-9b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--decode-steps", type=int, default=32)
     ap.add_argument("--requests", default=None,
-                    help="discovery mode: JSONL request file (default stdin)")
+                    help="JSONL request file (default stdin)")
     ap.add_argument("--slice-steps", type=int, default=1)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue checkpointed requests from their newest "
+                         "committed step (the restart half of a "
+                         "kill-and-resume cycle; DESIGN.md §15)")
+    ap.add_argument("--heartbeat", default=None, metavar="PATH",
+                    help="liveness file beaten after every flushed batch")
     args = ap.parse_args()
-    if args.mode == "discovery":
-        lines = open(args.requests) if args.requests else None
-        try:
-            svc = serve_discovery(lines=lines, slice_steps=args.slice_steps)
-        finally:
-            if lines is not None:
-                lines.close()
-        print(f"[serve] {svc.requests_served} requests, "
-              f"{svc.engine_steps_total} engine steps, "
-              f"cache {svc.cache.stats()}", file=sys.stderr)
-        return
-    r = serve(args.arch, args.batch, args.prompt_len, args.decode_steps)
-    print(f"[serve] prefill {r['prefill_s']:.2f}s, "
-          f"decode {r['decode_s']:.2f}s "
-          f"({r['decode_tok_s']:.1f} tok/s), sample: {r['tokens'][0][:8]}")
+    lines = open(args.requests) if args.requests else None
+    try:
+        svc = serve_discovery(lines=lines, slice_steps=args.slice_steps,
+                              batch_size=args.batch_size,
+                              resume=args.resume, heartbeat=args.heartbeat)
+    finally:
+        if lines is not None:
+            lines.close()
+    print(f"[serve] {svc.requests_served} requests, "
+          f"{svc.engine_steps_total} engine steps, "
+          f"cache {svc.cache.stats()}", file=sys.stderr)
 
 
 if __name__ == "__main__":

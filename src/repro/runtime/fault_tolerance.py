@@ -1,28 +1,23 @@
-"""Fault-tolerance runtime: straggler watch, heartbeats, elastic remesh.
+"""Fault-tolerance runtime for durable discovery serving (DESIGN.md §15).
 
-On a real multi-pod deployment this process runs per host; here the same
-logic is exercised single-host (tests simulate failures and slow steps).
-
-* :class:`StragglerMonitor` — EMA step-time watchdog.  A step slower than
-  ``threshold × EMA`` is flagged; the training driver responds by (a)
-  logging the event, (b) optionally shrinking the per-host microbatch
-  ("bounded-staleness dispatch": slow hosts contribute fewer microbatches
-  to the next accumulation window instead of stalling the collective).
-* :class:`Heartbeat` — liveness file the launcher touches every step; an
-  external supervisor (or another host) declares the worker dead when the
-  heartbeat goes stale and restarts it — restart then resumes from the
-  latest committed checkpoint (see ``launch/train.py --fail-at-step``).
-* :func:`elastic_remesh` — reload a checkpoint onto a different mesh shape
-  (scale up/down): checkpoints store full arrays, so re-sharding is a
-  device_put with the new shardings; the step counter carries over.
+* :class:`StragglerMonitor` — EMA step-time watchdog.  The service layer
+  runs one per live query (``repro.service.scheduler.EngineQueryTask``):
+  an engine (macro-)step slower than ``threshold × EMA`` is flagged and
+  the count is surfaced as ``stats["straggler_steps"]`` in the query's
+  response — a per-query slow-step audit for multi-tenant serving.
+* :class:`Heartbeat` — liveness file the serve loop
+  (``repro.launch.serve --heartbeat``) touches after every flushed batch;
+  an external supervisor declares the worker dead when the heartbeat goes
+  stale, kills it, and restarts with ``--resume`` — checkpointed queries
+  then continue from their newest committed step with answers
+  byte-identical to an uninterrupted run (tests/test_fault_injection.py
+  proves exactly this cycle under SIGKILL).
 """
 from __future__ import annotations
 
 import os
 import time
 from typing import Optional
-
-import jax
 
 
 class StragglerMonitor:
@@ -68,9 +63,3 @@ class Heartbeat:
             return time.time() - float(ts) > timeout
         except (OSError, ValueError):
             return True
-
-
-def elastic_remesh(manager, like, new_shardings, step: Optional[int] = None):
-    """Restore the latest checkpoint re-sharded for a new mesh (elastic
-    scale-up/down after node gain/loss)."""
-    return manager.restore(like, step=step, shardings=new_shardings)

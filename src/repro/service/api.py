@@ -125,6 +125,22 @@ class DiscoveryRequest:
     # not — so like batch/pool_capacity (and unlike the kernel knobs) it
     # is part of the result-cache key.
     shards: int = 1
+    # durable runs (engine workloads; DESIGN.md §15): checkpoint_every =
+    # N > 0 persists the query's engine state to checkpoint_dir at the
+    # first host-sync boundary every >= N steps, through the atomic-commit
+    # protocol; resume=True re-admits the query from the newest committed
+    # step there (fresh start when none exists), with the remaining
+    # step_budget honored exactly — the restored state carries its step
+    # count, so budget truncation lands on the same total step count as an
+    # uninterrupted run.  Checkpoints are pure observers (a resumed
+    # complete run is byte-identical — crash-proved in
+    # tests/test_fault_injection.py), so like use_pallas/steps_per_sync
+    # both knobs are EXCLUDED from the result-cache key; they ARE part of
+    # the engine-reuse key (tasks sharing an engine share its checkpoint
+    # policy via EngineConfig).
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    resume: bool = False
     # service knobs
     use_cache: bool = True
     request_id: Optional[str] = None
@@ -140,14 +156,17 @@ class DiscoveryRequest:
         try:
             for f in ("k", "batch", "pool_capacity", "step_budget",
                       "candidate_budget", "max_hops", "m_edges", "shards",
-                      "steps_per_sync", "sync_every"):
+                      "steps_per_sync", "sync_every", "checkpoint_every"):
                 if d.get(f) is not None:
                     d[f] = int(d[f])
-            for f in ("induced", "use_pallas", "use_cache", "interpret"):
+            for f in ("induced", "use_pallas", "use_cache", "interpret",
+                      "resume"):
                 if d.get(f) is not None:
                     d[f] = bool(d[f])
             if d.get("label_filter") is not None:
                 d["label_filter"] = str(d["label_filter"])
+            if d.get("checkpoint_dir") is not None:
+                d["checkpoint_dir"] = str(d["checkpoint_dir"])
             if d.get("weights") is not None:
                 d["weights"] = tuple(int(w) for w in d["weights"])
             if d.get("q_edges") is not None:
@@ -191,6 +210,20 @@ class DiscoveryRequest:
                 "shards > 1 applies to engine workloads only; pattern "
                 "mining runs on the host-side aggregate model "
                 "(DESIGN.md §11)")
+        if self.checkpoint_every < 0:
+            raise ValidationError(
+                f"checkpoint_every must be >= 0, got {self.checkpoint_every}")
+        if self.checkpoint_every > 0 and not self.checkpoint_dir:
+            raise ValidationError(
+                "checkpoint_every > 0 requires `checkpoint_dir`")
+        if self.resume and not self.checkpoint_dir:
+            raise ValidationError("resume requires `checkpoint_dir`")
+        if (self.checkpoint_every > 0 or self.resume) and \
+                self.workload == "pattern":
+            raise ValidationError(
+                "checkpoint/resume applies to engine workloads only; "
+                "pattern mining runs on the host-side aggregate model "
+                "(DESIGN.md §15)")
         g = registry.get(self.graph)
 
         if self.workload == "weighted-clique":
@@ -285,10 +318,16 @@ class DiscoveryRequest:
         entry), ``steps_per_sync`` (DESIGN.md §13: complete runs are
         byte-identical for any fusion depth and budget truncation lands
         on the same step count, so fused and unfused runs of the same
-        query share one cache entry too), and ``sync_every`` for the same
+        query share one cache entry too), ``sync_every`` for the same
         reason (DESIGN.md §14: a stale bound is only ever looser, so
         complete runs are byte-identical for any exchange cadence — both
-        knobs remain part of the engine-reuse key, which they DO change).
+        knobs remain part of the engine-reuse key, which they DO change),
+        and the checkpoint knobs ``checkpoint_every`` / ``checkpoint_dir``
+        / ``resume`` (DESIGN.md §15: checkpoints are pure observers and a
+        resumed run is byte-identical to an uninterrupted one, so
+        checkpointed, resumed, and plain runs of the same query share one
+        cache entry; the first two join the engine-reuse key — tasks
+        sharing an engine share its checkpoint policy).
         ``shards`` IS included, like
         ``batch``/``pool_capacity``:
         complete runs are shard-count invariant, but a run truncated by
@@ -403,6 +442,8 @@ def compile_request(req: DiscoveryRequest, registry: GraphRegistry,
                        max_steps=req.step_budget, shards=req.shards,
                        steps_per_sync=req.steps_per_sync,
                        sync_every=req.sync_every,
+                       checkpoint_every=req.checkpoint_every,
+                       checkpoint_dir=req.checkpoint_dir,
                        use_pallas=req.use_pallas, interpret=req.interpret)
 
     if req.workload == "clique":

@@ -23,6 +23,7 @@ from typing import Dict, List, Optional
 from repro.core.aggregate import TopKPatternMiner
 from repro.core.engine import NEG, Engine
 from repro.core.graph import GraphStore
+from repro.runtime.fault_tolerance import StragglerMonitor
 
 from .api import (DiscoveryRequest, DiscoveryResponse, GraphRegistry,
                   ValidationError, compile_request)
@@ -43,10 +44,36 @@ class EngineQueryTask:
         self.request = request
         self.comp = engine.comp
         self.engine = engine
-        self.state = engine.start()
+        # durable runs (DESIGN.md §15): resume re-admits the query from the
+        # newest committed checkpoint; checkpoint_every persists it as it
+        # steps.  The restored state carries its step count, so the
+        # remaining step_budget is honored exactly, and steps_at_admission
+        # lets the service count only the steps *this* admission ran
+        # (a restored query must not double-count its pre-crash steps in
+        # engine_steps_total).
+        self._mgr = None
+        if request.checkpoint_dir and (request.checkpoint_every > 0
+                                       or request.resume):
+            from repro.checkpoint.manager import CheckpointManager
+            self._mgr = CheckpointManager(request.checkpoint_dir)
+        self.state = None
+        if request.resume and self._mgr is not None and \
+                self._mgr.latest_step() is not None:
+            self.state = engine.resume(self._mgr)
+        if self.state is None:
+            self.state = engine.start()
+        self.steps_at_admission = self.state.steps
+        self._last_ckpt = self.state.steps
+        # per-query slow-step watchdog: EMA step-time monitor, flagged
+        # steps surfaced as stats["straggler_steps"]
+        self.straggler = StragglerMonitor()
         self.terminated: Optional[str] = None
         self._payload: Optional[dict] = None
-        if self._over_candidate_budget():   # seed frontier alone may exceed
+        if self.state.done:                 # a resumed, finished run
+            self.terminated = "complete"
+        elif self.state.steps >= request.step_budget:
+            self.terminated = "step_budget"
+        elif self._over_candidate_budget():  # seed frontier alone may exceed
             self.terminated = "candidate_budget"
 
     def _over_candidate_budget(self) -> bool:
@@ -63,9 +90,11 @@ class EngineQueryTask:
         # one scheduled step is one engine macro-step (steps_per_sync fused
         # super-steps); capping the fused count to the remaining budget
         # keeps step_budget truncation exact for any steps_per_sync
+        t0 = time.perf_counter()
         self.engine.step(self.state,
                          max_inner=self.request.step_budget
                          - self.state.steps)
+        self.straggler.record(self.state.steps, time.perf_counter() - t0)
         # budgets come from the request, not engine.cfg: the engine may be
         # shared with requests that differ only in budgets
         if self.state.done:
@@ -74,11 +103,23 @@ class EngineQueryTask:
             self.terminated = "step_budget"
         elif self._over_candidate_budget():
             self.terminated = "candidate_budget"
+        if self._mgr is not None and self.request.checkpoint_every > 0 and \
+                self.state.steps - self._last_ckpt >= \
+                self.request.checkpoint_every:
+            self.engine.save_checkpoint(self._mgr, self.state)
+            self._last_ckpt = self.state.steps
 
     def finalize(self) -> dict:
         if self._payload is not None:
             return self._payload
+        if self._mgr is not None and self.request.checkpoint_every > 0 \
+                and self.state.steps > self._last_ckpt:
+            # terminal state is restorable too (before finalize closes
+            # the VPQ; the capture runs synchronously so close is safe)
+            self.engine.save_checkpoint(self._mgr, self.state)
         res = self.engine.finalize(self.state)
+        if self._mgr is not None:
+            self._mgr.wait()
         results = []
         for i, key in enumerate(res.result_keys):
             if int(key) == int(NEG):
@@ -96,7 +137,8 @@ class EngineQueryTask:
                        spilled=res.spilled, refilled=res.refilled,
                        rebalanced=res.rebalanced,
                        late_pruned=res.late_pruned,
-                       syncs=res.syncs, host_syncs=res.host_syncs),
+                       syncs=res.syncs, host_syncs=res.host_syncs,
+                       straggler_steps=len(self.straggler.events)),
             terminated=self.terminated or "complete")
         return self._payload
 
@@ -123,6 +165,7 @@ class PatternQueryTask:
                                       interpret=req.interpret,
                                       predicate=req.predicate(),
                                       label_filter=req.label_filter)
+        self.straggler = StragglerMonitor()
         self.terminated: Optional[str] = (
             "complete" if self.miner.done else None)
         self._payload: Optional[dict] = None
@@ -140,7 +183,9 @@ class PatternQueryTask:
     def step(self) -> None:
         if self.finished:
             return
+        t0 = time.perf_counter()
         self.miner.step()
+        self.straggler.record(self.miner.steps, time.perf_counter() - t0)
         if self.miner.done:
             self.terminated = ("complete" if self.miner.completed
                                else "candidate_budget")
@@ -161,7 +206,8 @@ class PatternQueryTask:
             stats=dict(steps=self.miner.steps, candidates=res.candidates,
                        expanded=res.groups_expanded,
                        pruned=res.groups_pruned, spilled=0, refilled=0,
-                       rebalanced=0, late_pruned=0),
+                       rebalanced=0, late_pruned=0,
+                       straggler_steps=len(self.straggler.events)),
             terminated=self.terminated or "complete")
         return self._payload
 
@@ -266,7 +312,10 @@ class DiscoveryService:
         for indices, key, task in pending:
             payload = task.finalize()
             if isinstance(task, EngineQueryTask):
-                self.engine_steps_total += task.state.steps
+                # count only the steps this admission actually ran: a
+                # resumed state arrives carrying its pre-crash step count
+                self.engine_steps_total += (task.state.steps
+                                            - task.steps_at_admission)
             if key is not None:
                 self.cache.put(key, payload)
             for j, i in enumerate(indices):
@@ -289,7 +338,11 @@ class DiscoveryService:
         # use_pallas/interpret/steps_per_sync/sync_every change the
         # compiled step without changing complete-run results (so they're
         # added back — all four are deliberately absent from the
-        # result-cache key; shards is already in the spec)
+        # result-cache key; shards is already in the spec).  The checkpoint
+        # knobs join them: they ride EngineConfig (Engine.run reads them),
+        # so tasks sharing an engine must share its checkpoint policy —
+        # and two queries writing different checkpoint_dirs must not share
+        # one engine object (DESIGN.md §15).
         engine_spec = req.canonical_spec()
         engine_spec.pop("step_budget", None)
         engine_spec.pop("candidate_budget", None)
@@ -297,6 +350,8 @@ class DiscoveryService:
         engine_spec["interpret"] = req.interpret
         engine_spec["steps_per_sync"] = req.steps_per_sync
         engine_spec["sync_every"] = req.sync_every
+        engine_spec["checkpoint_every"] = req.checkpoint_every
+        engine_spec["checkpoint_dir"] = req.checkpoint_dir
         engine_key = make_cache_key(graph.fingerprint, engine_spec)
         engine = self._engines.get(engine_key)
         if engine is None:

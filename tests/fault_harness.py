@@ -1,0 +1,155 @@
+"""Crash-injection harness for durable discovery runs (DESIGN.md §15).
+
+Runs one discovery workload in THIS process as directed by a JSON spec,
+in one of three modes:
+
+* ``oracle`` — uninterrupted run, no checkpointing; prints the result.
+* ``crash``  — run with periodic checkpointing and a kill switch armed:
+  ``kill_at_step N`` SIGKILLs the process at the first host-sync boundary
+  whose step count reaches ``N``; ``kill_in_commit N`` SIGKILLs *inside*
+  the checkpoint manager's commit, after the tmp dir is fully written but
+  before the atomic rename — the exact window the §15 protocol claims is
+  safe.  The process dies by SIGKILL; nothing is printed.
+* ``resume`` — run with ``resume=True``: continue from the newest
+  committed step (fresh start if the crash preceded the first commit)
+  and print the result.
+
+The parent test (``test_fault_injection.py``) asserts the resumed result
+is byte-identical to the oracle's — top-k states, keys, and every
+counter.  The harness is import-safe (the parent reuses its helpers) and
+runs as a script in a subprocess so the SIGKILL is real::
+
+    PYTHONPATH=src python tests/fault_harness.py --spec '<json>' --mode crash
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import signal
+import sys
+
+
+def make_workload(kind: str, seed: int):
+    """Seeded random (graph, computation) pair — the same families as the
+    staleness suite: clique / weighted-clique / iso."""
+    import numpy as np
+    from repro.core.clique import make_clique_computation
+    from repro.core.iso import build_iso_index, make_iso_computation
+    from repro.core.weighted_clique import make_weighted_clique_computation
+    from repro.data.synthetic_graphs import densifying_graph, labeled_graph
+
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(64, 96))
+    m = int(rng.integers(6 * n, 12 * n))
+    if kind == "clique":
+        return make_clique_computation(densifying_graph(n, m, seed=seed))
+    if kind == "weighted-clique":
+        g = densifying_graph(n, m, seed=seed)
+        return make_weighted_clique_computation(g, rng.integers(1, 20, g.n))
+    assert kind == "iso", kind
+    gl = labeled_graph(n=n, m=m, n_labels=3, seed=seed)
+    return make_iso_computation(gl, [(0, 1), (1, 2), (0, 2)], [1, 1, 1],
+                                build_iso_index(gl, max_hops=2))
+
+
+def build_engine(spec: dict, checkpointed: bool):
+    """Engine (1 shard) or ShardedEngine (>1) for ``spec``; checkpointing
+    knobs attach only when ``checkpointed``."""
+    from repro.core.engine import Engine, EngineConfig
+    from repro.distributed import ShardedEngine
+
+    comp = make_workload(spec["kind"], spec["seed"])
+    cfg = EngineConfig(
+        k=spec.get("k", 3), batch=spec.get("batch", 4),
+        pool_capacity=spec.get("pool_capacity", 48), max_steps=50_000,
+        spill=spec.get("spill", "host"),
+        spill_dir=spec.get("spill_dir"),
+        shards=spec.get("shards", 1),
+        steps_per_sync=spec.get("T", 1),
+        sync_every=spec.get("K", 1),
+        checkpoint_every=spec["checkpoint_every"] if checkpointed else 0,
+        checkpoint_dir=spec["ckpt_dir"] if checkpointed else None)
+    if cfg.shards > 1:
+        return ShardedEngine(comp, cfg)
+    return Engine(comp, dataclasses.replace(cfg, shards=1))
+
+
+def result_to_json(res) -> str:
+    return json.dumps({
+        "result_keys": [int(x) for x in res.result_keys],
+        "result_states": [[int(x) for x in row]
+                          for row in res.result_states],
+        "steps": res.steps, "candidates": res.candidates,
+        "expanded": res.expanded, "pruned": res.pruned,
+        "spilled": res.spilled, "refilled": res.refilled,
+        "late_pruned": res.late_pruned, "syncs": res.syncs,
+        "host_syncs": res.host_syncs,
+        "rebalanced": getattr(res, "rebalanced", 0)}, sort_keys=True)
+
+
+def _arm_kill_at_step(eng, n: int):
+    """SIGKILL at the first host-sync boundary where ``steps >= n`` —
+    mid-run, with the async writer possibly in flight."""
+    inner = eng.step
+
+    def step(st, max_inner=None):
+        out = inner(st, max_inner=max_inner)
+        if out.steps >= n:
+            os.kill(os.getpid(), signal.SIGKILL)
+        return out
+
+    eng.step = step
+
+
+def _arm_kill_in_commit(n: int):
+    """SIGKILL inside the ``n``-th checkpoint commit, after the tmp dir is
+    complete (leaves + manifest + COMMITTED) but before the rename — the
+    window the atomic-commit protocol must survive."""
+    from repro.checkpoint.manager import CheckpointManager
+    count = [0]
+    inner = CheckpointManager._commit
+
+    def commit(self, tmp, final):
+        count[0] += 1
+        if count[0] >= n:
+            os.kill(os.getpid(), signal.SIGKILL)
+        return inner(self, tmp, final)
+
+    CheckpointManager._commit = commit
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", required=True, help="JSON workload spec")
+    ap.add_argument("--mode", required=True,
+                    choices=("oracle", "crash", "resume"))
+    args = ap.parse_args(argv)
+    spec = json.loads(args.spec)
+
+    if args.mode == "oracle":
+        eng = build_engine(spec, checkpointed=False)
+        res = eng.run()
+    elif args.mode == "crash":
+        eng = build_engine(spec, checkpointed=True)
+        if spec.get("kill_in_commit"):
+            _arm_kill_in_commit(int(spec["kill_in_commit"]))
+        if spec.get("kill_at_step"):
+            _arm_kill_at_step(eng, int(spec["kill_at_step"]))
+        # spec["resume"] arms a SECOND crash cycle: continue from the
+        # newest committed step, then die again further along
+        eng.run(resume=bool(spec.get("resume")))
+        # the kill switch should have fired; reaching here means the kill
+        # point was past the end of the run — a parent-test bug
+        print("crash mode survived to completion", file=sys.stderr)
+        return 3
+    else:
+        eng = build_engine(spec, checkpointed=True)
+        res = eng.run(resume=True)
+    print("RESULT " + result_to_json(res), flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,202 @@
+"""Crash-injection suite for durable discovery runs (DESIGN.md §15).
+
+Each cell runs three real subprocesses through ``tests/fault_harness.py``:
+
+1. **oracle** — the uninterrupted run, no checkpointing;
+2. **crash** — the same run with periodic checkpointing, SIGKILLed either
+   at a fuzzed host-sync boundary or *inside* a checkpoint commit (tmp
+   dir fully written, rename not yet executed — the exact window the
+   atomic-commit protocol claims is safe);
+3. **resume** — restart with ``resume=True`` from the newest committed
+   step (fresh start when the crash preceded the first commit).
+
+The resumed result must be byte-identical to the oracle's — top-k states
+and keys AND every counter (steps, candidates, expanded, pruned, spilled,
+refilled, late_pruned, syncs, host_syncs, rebalanced).  The kill step is
+fuzzed from a seeded RNG inside ``[1, oracle_steps)`` so every run of the
+suite exercises a different crash point deterministically per seed.
+
+Shard tiers follow the staleness suite's convention: 2-shard cells skip
+unless 2 host devices are visible (the CI ``faults`` job forces 2), the
+8-shard cells unless 8 are (the CI ``distributed`` job).  After every
+resume the checkpoint dir is leak-checked: no ``step_*.tmp`` dirs may
+survive (stale tmps from the kill are swept when the resumed manager
+attaches), and the resumed run's spill dir must hold no orphaned run
+files once the VPQ closes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+_HARNESS = os.path.join(os.path.dirname(__file__), "fault_harness.py")
+
+
+def _require_devices(n: int) -> None:
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs >= {n} devices (force host devices with "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count={n})")
+
+
+def _run_child(spec: dict, mode: str, timeout: int = 600):
+    """One harness subprocess; returns (returncode, parsed RESULT or None)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(_HARNESS), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    shards = spec.get("shards", 1)
+    if shards > 1:
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={shards}"
+    proc = subprocess.run(
+        [sys.executable, _HARNESS, "--spec", json.dumps(spec),
+         "--mode", mode],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    result = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            result = json.loads(line[len("RESULT "):])
+    return proc.returncode, result, proc.stderr
+
+
+def _assert_no_tmp_dirs(ckpt_dir: str):
+    leaks = [d for d in os.listdir(ckpt_dir) if d.endswith(".tmp")]
+    assert not leaks, f"stale checkpoint tmp dirs leaked: {leaks}"
+
+
+def _assert_spill_clean(spill_dir: str):
+    if not os.path.isdir(spill_dir):
+        return
+    leaks = [os.path.join(r, f) for r, _, fs in os.walk(spill_dir)
+             for f in fs]
+    assert not leaks, f"orphaned spill files after close: {leaks}"
+
+
+def _crash_resume_cycle(tmp_path, spec, kill, second_kill=None):
+    """oracle → crash(kill) [→ crash(resume, second_kill)] → resume; the
+    resumed result must equal the oracle's in every field.  ``kill`` /
+    ``second_kill`` may be dicts or callables of the oracle's step count
+    (for fuzzed kill points inside the run's actual span)."""
+    spec = dict(spec,
+                ckpt_dir=str(tmp_path / "ckpt"),
+                spill_dir=str(tmp_path / "spill_oracle"))
+    rc, oracle, err = _run_child(spec, "oracle")
+    assert rc == 0, err
+    assert oracle is not None
+    assert any(k > np.iinfo(np.int32).min for k in oracle["result_keys"]), \
+        "oracle found nothing — workload too small to test anything"
+    steps = oracle["steps"]
+    assert steps > spec["checkpoint_every"] + 2, \
+        f"run too short ({steps} steps) for checkpoint_every=" \
+        f"{spec['checkpoint_every']}"
+    if callable(kill):
+        kill = kill(steps)
+    if callable(second_kill):
+        second_kill = second_kill(steps)
+
+    kill_spec = dict(spec, spill_dir=str(tmp_path / "spill_crash"), **kill)
+    rc, res, err = _run_child(kill_spec, "crash")
+    assert rc == -9, f"crash child did not die by SIGKILL (rc={rc}): {err}"
+    assert res is None
+
+    if second_kill is not None:
+        again = dict(spec, spill_dir=str(tmp_path / "spill_crash2"),
+                     resume=True, **second_kill)
+        rc, res, err = _run_child(again, "crash")
+        assert rc == -9, f"second crash survived (rc={rc}): {err}"
+
+    resume_spec = dict(spec, spill_dir=str(tmp_path / "spill_resume"))
+    rc, resumed, err = _run_child(resume_spec, "resume")
+    assert rc == 0, err
+    assert resumed == oracle, \
+        f"resumed run diverged from oracle:\n{resumed}\nvs\n{oracle}"
+    _assert_no_tmp_dirs(spec["ckpt_dir"])
+    _assert_spill_clean(resume_spec["spill_dir"])
+    return steps
+
+
+def _fuzz_step(seed: int, lo: int, hi: int) -> int:
+    return int(np.random.default_rng(seed).integers(lo, hi))
+
+
+# --------------------------------------------------------- 1-shard tier
+def test_kill_at_fuzzed_step_then_again(tmp_path):
+    """clique/host: SIGKILL at a fuzzed step, resume, SIGKILL again later,
+    resume again — repeated crashes still converge to the oracle."""
+    spec = dict(kind="clique", seed=31, spill="host", shards=1, T=1, K=1,
+                checkpoint_every=8)
+    _crash_resume_cycle(
+        tmp_path, spec,
+        lambda steps: {"kill_at_step": _fuzz_step(101, 9, steps - 4)},
+        second_kill=lambda steps: {
+            "kill_at_step": _fuzz_step(102, steps - 3, steps - 1)})
+
+
+def test_kill_inside_commit_window(tmp_path):
+    """iso/disk, macro-stepped: SIGKILL between tmp-write and rename on
+    the 2nd commit — the newest *committed* step (the 1st) restores."""
+    spec = dict(kind="iso", seed=32, spill="disk", shards=1, T=4, K=1,
+                checkpoint_every=16)
+    _crash_resume_cycle(tmp_path, spec, {"kill_in_commit": 2})
+
+
+def test_kill_before_first_commit_falls_back_fresh(tmp_path):
+    """clique/disk: SIGKILL inside the FIRST commit — nothing committed,
+    resume must fall back to a fresh start and still match the oracle."""
+    spec = dict(kind="clique", seed=33, spill="disk", shards=1, T=2, K=1,
+                checkpoint_every=8)
+    _crash_resume_cycle(tmp_path, spec, {"kill_in_commit": 1})
+
+
+def test_kill_at_step_weighted_clique(tmp_path):
+    """weighted-clique/disk: fuzzed mid-run SIGKILL on the third workload
+    family (widest state layout: two bitsets + two weights)."""
+    spec = dict(kind="weighted-clique", seed=34, spill="disk", shards=1,
+                T=2, K=1, checkpoint_every=8)
+    _crash_resume_cycle(
+        tmp_path, spec,
+        lambda steps: {"kill_at_step": _fuzz_step(104, 9, steps - 1)})
+
+
+# --------------------------------------------------------- 2-shard tier
+def test_kill_at_step_2shards(tmp_path):
+    """iso × 2 shards with stale bounds (K=2) and macro-steps (T=2):
+    per-shard VPQ snapshots + the merged manifest restore together."""
+    _require_devices(2)
+    spec = dict(kind="iso", seed=35, spill="disk", shards=2, T=2, K=2,
+                checkpoint_every=8)
+    _crash_resume_cycle(
+        tmp_path, spec,
+        lambda steps: {"kill_at_step": _fuzz_step(105, 9, steps - 1)})
+
+
+def test_kill_inside_commit_2shards(tmp_path):
+    """clique × 2 shards, host spill: mid-commit SIGKILL with sharded
+    state — the per-shard subdirs commit or vanish atomically together."""
+    _require_devices(2)
+    spec = dict(kind="clique", seed=36, spill="host", shards=2, T=1, K=4,
+                checkpoint_every=8)
+    _crash_resume_cycle(tmp_path, spec, {"kill_in_commit": 2})
+
+
+# --------------------------------------------------------- 8-shard tier
+def test_kill_at_step_8shards(tmp_path):
+    """clique × 8 shards (CI ``distributed`` job): fuzzed mid-run kill."""
+    _require_devices(8)
+    spec = dict(kind="clique", seed=37, spill="disk", shards=8, T=2, K=2,
+                checkpoint_every=8)
+    _crash_resume_cycle(
+        tmp_path, spec,
+        lambda steps: {"kill_at_step": _fuzz_step(107, 9, steps - 1)})
+
+
+def test_kill_inside_commit_8shards(tmp_path):
+    """weighted-clique × 8 shards: mid-commit kill at scale."""
+    _require_devices(8)
+    spec = dict(kind="weighted-clique", seed=38, spill="host", shards=8,
+                T=1, K=1, checkpoint_every=8)
+    _crash_resume_cycle(tmp_path, spec, {"kill_in_commit": 2})

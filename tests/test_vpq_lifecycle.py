@@ -92,6 +92,84 @@ def test_run_ragged_last_buffer_block(tmp_path, backend, n, buffer_size):
     assert _spill_files(str(tmp_path)) == []
 
 
+def test_restored_disk_runs_lifecycle(tmp_path):
+    """Spill-file lifecycle across snapshot/restore (DESIGN.md §15):
+    ``snapshot`` hardlinks each live run's files into the checkpoint dir
+    (referenced, not copied); ``restore`` links them back into a fresh
+    live spill dir; the restored queue deletes its OWN links as runs
+    exhaust while the checkpoint's files stay intact — so one committed
+    checkpoint restores any number of times."""
+    live = tmp_path / "live"
+    ckpt = tmp_path / "ckpt"
+    vpq = VirtualPriorityQueue(state_width=3, backend="disk",
+                               spill_dir=str(live), buffer_size=8,
+                               run_flush_size=16)
+    for round_ in range(3):                    # 3 runs of 16
+        s, p, u = _entries(round_ * 16, round_ * 16 + 16, state_width=3)
+        vpq.maybe_push(s, p, u)
+        vpq._flush_pending()
+    s, p, u = _entries(100, 105, state_width=3)
+    vpq.maybe_push(s, p, u)                    # + an unflushed pending frag
+    vpq.pop_chunk(7)                           # advance cursors mid-buffer
+
+    manifest = vpq.snapshot(str(ckpt))
+    ckpt_files = _spill_files(str(ckpt))
+    assert ckpt_files, "disk snapshot wrote no run files"
+    # referenced, not copied: checkpointed run files share inodes with
+    # the live spill files (hardlinks), so big spills snapshot in O(1)
+    assert any(os.stat(os.path.join(str(ckpt), f)).st_nlink >= 2
+               for f in ckpt_files)
+
+    expect = []
+    while len(vpq):
+        expect.append(vpq.pop_chunk(11)[1])
+
+    for round_ in range(2):                    # same checkpoint, twice
+        spill = tmp_path / f"restored{round_}"
+        back = VirtualPriorityQueue.restore(manifest, str(ckpt),
+                                            spill_dir=str(spill))
+        assert _spill_files(str(spill)), "restore did not link run files"
+        seen = len(_spill_files(str(spill)))
+        for chunk in expect:                   # byte-identical drain …
+            np.testing.assert_array_equal(back.pop_chunk(11)[1], chunk)
+            now = len(_spill_files(str(spill)))
+            assert now <= seen                 # … deleting links as it goes
+            seen = now
+        assert len(back) == 0
+        back.close()
+        assert _spill_files(str(spill)) == [], \
+            "restored queue leaked its linked spill files"
+        # the checkpoint itself is untouched — restorable again
+        assert _spill_files(str(ckpt)) == ckpt_files
+
+
+def test_restored_host_queue_drains_identically(tmp_path):
+    """Host-backend snapshot saves each run's unconsumed remainder; the
+    restored queue must drain exactly like the original, including the
+    pending fragment and late-pruned accounting."""
+    vpq = VirtualPriorityQueue(state_width=2, backend="host",
+                               run_flush_size=8)
+    rng = np.random.default_rng(3)
+    prio = rng.permutation(48).astype(np.int32)
+    states = np.repeat(prio[:, None], 2, 1).astype(np.int32)
+    vpq.maybe_push(states, prio, prio.copy())
+    vpq._flush_pending()
+    s, p, u = _entries(60, 63, state_width=2)
+    vpq.maybe_push(s, p, u)
+    vpq.pop_chunk(5)
+
+    manifest = vpq.snapshot(str(tmp_path / "ckpt"))
+    back = VirtualPriorityQueue.restore(manifest, str(tmp_path / "ckpt"))
+    assert len(back) == len(vpq)
+    while len(vpq):
+        a = vpq.pop_chunk(9, min_ub=20)
+        b = back.pop_chunk(9, min_ub=20)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+    assert len(back) == 0
+    assert back.total_late_pruned == vpq.total_late_pruned
+
+
 def test_pop_chunk_merges_across_ragged_runs(tmp_path):
     """Interleaved priorities across runs with ragged buffers: the merge
     must yield a globally sorted stream."""
