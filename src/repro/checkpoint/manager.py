@@ -35,10 +35,13 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 import jax
+
+from repro.obs import NOOP
 
 
 def _leaf_names(tree) -> list:
@@ -58,11 +61,25 @@ def _leaf_names(tree) -> list:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_last: int = 3):
+    def __init__(self, directory: str, keep_last: int = 3, obs=None):
         self.dir = directory
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        # observability handles (DESIGN.md §16); metrics are thread-safe,
+        # so the writer thread records into the same registry
+        self.obs = obs if obs is not None else NOOP
+        self._m_saves = self.obs.counter(
+            "checkpoint_saves_total", "checkpoint save() calls")
+        self._m_bytes = self.obs.counter(
+            "checkpoint_bytes_written_total",
+            "bytes committed (leaves + side files + manifest)")
+        self._h_capture = self.obs.histogram(
+            "checkpoint_capture_seconds",
+            "synchronous capture-hook duration (blocks the engine)")
+        self._h_commit = self.obs.histogram(
+            "checkpoint_commit_seconds",
+            "writer-thread flush+commit duration (off the engine path)")
         # a crash between tmp-write and rename strands a ``.tmp`` dir;
         # it is uncommitted garbage by definition (the rename is the
         # commit point), so sweep it on attach
@@ -76,37 +93,53 @@ class CheckpointManager:
              capture: Optional[Callable[[str], Dict[str, Any]]] = None):
         """Snapshot ``tree`` to host, run ``capture`` synchronously into the
         tmp dir, then write and commit asynchronously."""
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-        self.wait()
-        final = os.path.join(self.dir, f"step_{step:08d}")
-        tmp = final + ".tmp"
-        shutil.rmtree(tmp, ignore_errors=True)
-        os.makedirs(tmp)
-        # synchronous: side files must reference engine structures *before*
-        # the caller mutates them again (e.g. VPQ runs deleted on exhaust)
-        extra = capture(tmp) if capture is not None else None
-        self._thread = threading.Thread(
-            target=self._write, args=(step, host_tree, tmp, final, extra),
-            daemon=True)
-        self._thread.start()
+        with self.obs.span("checkpoint.save"):
+            self._m_saves.inc()
+            host_tree = jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), tree)
+            self.wait()
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            # synchronous: side files must reference engine structures
+            # *before* the caller mutates them again (e.g. VPQ runs
+            # deleted on exhaust)
+            t0 = time.perf_counter() if self.obs.enabled else 0.0
+            with self.obs.span("checkpoint.capture"):
+                extra = capture(tmp) if capture is not None else None
+            if self.obs.enabled:
+                self._h_capture.observe(time.perf_counter() - t0)
+            self._thread = threading.Thread(
+                target=self._write,
+                args=(step, host_tree, tmp, final, extra), daemon=True)
+            self._thread.start()
         if blocking:
             self.wait()
 
     def _write(self, step: int, host_tree, tmp: str, final: str, extra):
-        names = _leaf_names(host_tree)
-        leaves = jax.tree.leaves(host_tree)
-        manifest = {"step": step, "leaves": [], "extra": extra}
-        for name, leaf in zip(names, leaves):
-            np.save(os.path.join(tmp, name + ".npy"), leaf)
-            manifest["leaves"].append(
-                {"name": name, "shape": list(leaf.shape),
-                 "dtype": str(leaf.dtype)})
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        with open(os.path.join(tmp, "COMMITTED"), "w") as f:
-            f.write("ok")
-        self._commit(tmp, final)
-        self._gc()
+        t0 = time.perf_counter() if self.obs.enabled else 0.0
+        with self.obs.span("checkpoint.commit"):
+            names = _leaf_names(host_tree)
+            leaves = jax.tree.leaves(host_tree)
+            manifest = {"step": step, "leaves": [], "extra": extra}
+            for name, leaf in zip(names, leaves):
+                np.save(os.path.join(tmp, name + ".npy"), leaf)
+                manifest["leaves"].append(
+                    {"name": name, "shape": list(leaf.shape),
+                     "dtype": str(leaf.dtype)})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+                f.write("ok")
+            if self.obs.enabled:
+                self._m_bytes.inc(sum(
+                    os.path.getsize(os.path.join(root, f))
+                    for root, _dirs, files in os.walk(tmp) for f in files))
+            self._commit(tmp, final)
+            self._gc()
+        if self.obs.enabled:
+            self._h_commit.observe(time.perf_counter() - t0)
 
     def _commit(self, tmp: str, final: str):
         """The atomic commit point: everything before this is invisible to

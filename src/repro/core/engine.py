@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from functools import partial
 from typing import Optional
 
@@ -51,6 +52,7 @@ import jax.numpy as jnp
 
 from .api import NEG, SubgraphComputation
 from .vpq import VirtualPriorityQueue
+from repro.obs import NOOP, Observability
 
 # EngineState counters checkpointed verbatim (DESIGN.md §15)
 _CKPT_SCALARS = ("steps", "candidates", "expanded", "pruned", "refilled",
@@ -152,6 +154,17 @@ class EngineConfig:
     # service result-cache key.
     use_pallas: bool = False      # score via the Pallas masked-intersection
     interpret: Optional[bool] = None  # None = auto-detect backend
+    # observability (DESIGN.md §16): observe=True routes the engine's
+    # metrics/spans into a live repro.obs.Observability instead of the
+    # process-global no-op.  A pure observer like checkpointing — results
+    # are byte-identical either way (parity-tested across shard counts
+    # and T in tests/test_obs.py) — so it is excluded from the service
+    # result-cache key but included in the engine-reuse key.
+    # ``observability`` optionally injects a shared instance (the service
+    # layer passes its own so per-request and per-engine telemetry land
+    # in one registry); None with observe=True creates a private one.
+    observe: bool = False
+    observability: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -263,6 +276,34 @@ class Engine:
         if self.T > 1:
             self._macro = jax.jit(self._macro_impl,
                                   donate_argnums=donatable_pool_argnums())
+        # observability (DESIGN.md §16): metric handles are resolved once
+        # here — the step loop touches the metric objects directly, never
+        # the registry.  With observe off every handle is the shared
+        # null metric and self._span returns the shared null span.
+        if config.observe:
+            self.obs = config.observability or Observability()
+        else:
+            self.obs = NOOP
+        obs = self.obs
+        self._span = obs.tracer.span
+        self._m_steps = obs.counter(
+            "engine_steps_total", "engine super-steps completed")
+        self._m_host_syncs = obs.counter(
+            "engine_host_syncs_total", "host-device round-trips")
+        self._m_candidates = obs.counter(
+            "engine_candidates_total", "subgraphs materialized")
+        self._m_expanded = obs.counter(
+            "engine_expanded_total", "subgraphs expanded")
+        self._m_pruned = obs.counter(
+            "engine_pruned_total", "dequeued states dropped by dominance")
+        self._m_refilled = obs.counter(
+            "engine_refilled_total", "pool entries refilled from spill")
+        self._g_occupancy = obs.gauge(
+            "engine_pool_occupancy", "live device-pool entries")
+        self._g_threshold = obs.gauge(
+            "engine_threshold", "current dominance threshold (k-th key)")
+        self._h_step = obs.histogram(
+            "engine_step_seconds", "wall time per engine step() call")
 
     # ------------------------------------------------------------------ step
     def _step_impl(self, pool_states, pool_prio, pool_ub,
@@ -583,9 +624,14 @@ class Engine:
     # ----------------------------------------------------------------- start
     def start(self) -> EngineState:
         """Seed the frontier and return a resumable :class:`EngineState`."""
+        with self._span("engine.start"):
+            return self._start_impl()
+
+    def _start_impl(self) -> EngineState:
         cfg, S, C, k = self.cfg, self.S, self.C, self.k
         vpq = VirtualPriorityQueue(
-            state_width=S, backend=cfg.spill, spill_dir=cfg.spill_dir)
+            state_width=S, backend=cfg.spill, spill_dir=cfg.spill_dir,
+            obs=self.obs)
 
         states0, prio0, ub0 = self.comp.init_frontier()
         n0 = states0.shape[0]
@@ -624,42 +670,73 @@ class Engine:
         exactly the same step count for any ``steps_per_sync``.  Updates
         ``st`` in place and returns it.
         """
+        t0 = time.perf_counter() if self.obs.enabled else 0.0
         if self.T == 1:
-            (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
-             st.result_keys, overflow, stats) = self._step(
-                st.pool_states, st.pool_prio, st.pool_ub,
-                st.result_states, st.result_keys)
-            stats = jax.tree.map(int, jax.device_get(stats))
-            st.steps += 1
+            with self._span("engine.step"):
+                # attribution caveat (docs/OBSERVABILITY.md): jax dispatch
+                # is async, so on accelerators part of the compute lands
+                # in the host_sync span where device_get blocks
+                with self._span("engine.device_compute"):
+                    (st.pool_states, st.pool_prio, st.pool_ub,
+                     st.result_states, st.result_keys, overflow,
+                     stats) = self._step(
+                        st.pool_states, st.pool_prio, st.pool_ub,
+                        st.result_states, st.result_keys)
+                with self._span("engine.host_sync"):
+                    stats = jax.tree.map(int, jax.device_get(stats))
+                st.steps += 1
+                st.host_syncs += 1
+                st.expanded += stats["expanded"]
+                st.candidates += stats["created"]
+                st.pruned += stats["pruned"]
+                st.threshold = stats["threshold"]
+                with self._span("engine.spill"):
+                    st.vpq.maybe_push(*map(np.asarray, overflow))
+                self._refill(st, stats["pool_occupancy"])
+            self._after_step(st, 1, stats, t0)
+            return st
+
+        t_cap = (self.T if max_inner is None
+                 else max(1, min(self.T, int(max_inner))))
+        with self._span("engine.step"):
+            with self._span("engine.device_compute"):
+                (st.pool_states, st.pool_prio, st.pool_ub,
+                 st.result_states, st.result_keys, acc_s, acc_p, acc_u,
+                 stats) = self._macro(
+                    st.pool_states, st.pool_prio, st.pool_ub,
+                    st.result_states, st.result_keys,
+                    np.int32(t_cap), len(st.vpq) > 0,
+                    np.int32(st.pool_occupancy))
+            with self._span("engine.host_sync"):
+                stats = jax.tree.map(int, jax.device_get(stats))
+            st.steps += stats["steps"]
             st.host_syncs += 1
             st.expanded += stats["expanded"]
             st.candidates += stats["created"]
             st.pruned += stats["pruned"]
             st.threshold = stats["threshold"]
-            st.vpq.maybe_push(*map(np.asarray, overflow))
+            w = stats["spill_count"]
+            if w:  # ship only the accumulator's valid prefix; none when dry
+                with self._span("engine.spill"):
+                    st.vpq.maybe_push(np.asarray(acc_s)[:w],
+                                      np.asarray(acc_p)[:w],
+                                      np.asarray(acc_u)[:w])
             self._refill(st, stats["pool_occupancy"])
-            return st
-
-        t_cap = (self.T if max_inner is None
-                 else max(1, min(self.T, int(max_inner))))
-        (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
-         st.result_keys, acc_s, acc_p, acc_u, stats) = self._macro(
-            st.pool_states, st.pool_prio, st.pool_ub,
-            st.result_states, st.result_keys,
-            np.int32(t_cap), len(st.vpq) > 0, np.int32(st.pool_occupancy))
-        stats = jax.tree.map(int, jax.device_get(stats))
-        st.steps += stats["steps"]
-        st.host_syncs += 1
-        st.expanded += stats["expanded"]
-        st.candidates += stats["created"]
-        st.pruned += stats["pruned"]
-        st.threshold = stats["threshold"]
-        w = stats["spill_count"]
-        if w:   # ship only the accumulator's valid prefix; nothing when dry
-            st.vpq.maybe_push(np.asarray(acc_s)[:w], np.asarray(acc_p)[:w],
-                              np.asarray(acc_u)[:w])
-        self._refill(st, stats["pool_occupancy"])
+        self._after_step(st, stats["steps"], stats, t0)
         return st
+
+    def _after_step(self, st: EngineState, n_steps: int, stats: dict,
+                    t0: float) -> None:
+        """Record one step() call's metrics (no-op handles when off)."""
+        self._m_steps.inc(n_steps)
+        self._m_host_syncs.inc()
+        self._m_expanded.inc(stats["expanded"])
+        self._m_candidates.inc(stats["created"])
+        self._m_pruned.inc(stats["pruned"])
+        self._g_occupancy.set(st.pool_occupancy)
+        self._g_threshold.set(st.threshold)
+        if self.obs.enabled:
+            self._h_step.observe(time.perf_counter() - t0)
 
     # ---------------------------------------------------------------- refill
     def _refill(self, st: EngineState, occ: int) -> None:
@@ -670,18 +747,20 @@ class Engine:
         if occ < C // 2 and len(st.vpq):
             # refill from spill runs; entries dominated by the current
             # threshold are dropped at the VPQ (paper-style late pruning)
-            r_states, r_prio, r_ub = st.vpq.pop_chunk(
-                C - occ, min_ub=st.threshold)
-            if len(r_prio):
-                refilled_now = len(r_prio)
-                st.refilled += refilled_now
-                (st.pool_states, st.pool_prio, st.pool_ub, os_, op_, ou_) = \
-                    self._insert(st.pool_states, st.pool_prio, st.pool_ub,
-                                 jnp.asarray(r_states),
-                                 jnp.asarray(r_prio),
-                                 jnp.asarray(r_ub))
-                st.vpq.maybe_push(np.asarray(os_), np.asarray(op_),
-                                  np.asarray(ou_))
+            with self._span("engine.refill"):
+                r_states, r_prio, r_ub = st.vpq.pop_chunk(
+                    C - occ, min_ub=st.threshold)
+                if len(r_prio):
+                    refilled_now = len(r_prio)
+                    st.refilled += refilled_now
+                    self._m_refilled.inc(refilled_now)
+                    (st.pool_states, st.pool_prio, st.pool_ub,
+                     os_, op_, ou_) = self._insert(
+                        st.pool_states, st.pool_prio, st.pool_ub,
+                        jnp.asarray(r_states), jnp.asarray(r_prio),
+                        jnp.asarray(r_ub))
+                    st.vpq.maybe_push(np.asarray(os_), np.asarray(op_),
+                                      np.asarray(ou_))
         # refilled entries are live in the pool (their priorities are > NEG),
         # so a refill that drained the VPQ must not read as completion
         st.pool_occupancy = occ + refilled_now
@@ -690,7 +769,11 @@ class Engine:
     # -------------------------------------------------------------- finalize
     def finalize(self, st: EngineState) -> EngineResult:
         """Close the VPQ and package the result set."""
-        st.vpq.close()
+        with self._span("engine.finalize"):
+            st.vpq.close()
+            return self._package(st)
+
+    def _package(self, st: EngineState) -> EngineResult:
         return EngineResult(
             result_states=np.asarray(st.result_states),
             result_keys=np.asarray(st.result_keys),
@@ -731,7 +814,7 @@ class Engine:
         remains restorable any number of times."""
         from repro.checkpoint.manager import CheckpointManager
         mgr = (source if isinstance(source, CheckpointManager)
-               else CheckpointManager(source))
+               else CheckpointManager(source, obs=self.obs))
         manifest = mgr.read_manifest(step)
         step = manifest["step"]
         extra = manifest["extra"]
@@ -745,7 +828,7 @@ class Engine:
         tree = mgr.restore(like, step=step)
         vpq = VirtualPriorityQueue.restore(
             extra["vpq"], os.path.join(mgr.path(step), "vpq"),
-            spill_dir=self.cfg.spill_dir)
+            spill_dir=self.cfg.spill_dir, obs=self.obs)
         return EngineState(
             pool_states=jnp.asarray(tree["pool_states"]),
             pool_prio=jnp.asarray(tree["pool_prio"]),
@@ -766,7 +849,7 @@ class Engine:
         if self.cfg.checkpoint_dir and (self.cfg.checkpoint_every > 0
                                         or resume):
             from repro.checkpoint.manager import CheckpointManager
-            mgr = CheckpointManager(self.cfg.checkpoint_dir)
+            mgr = CheckpointManager(self.cfg.checkpoint_dir, obs=self.obs)
         st = None
         if resume and mgr is not None and mgr.latest_step() is not None:
             st = self.resume(mgr)

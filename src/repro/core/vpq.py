@@ -34,9 +34,12 @@ from __future__ import annotations
 import os
 import shutil
 import tempfile
+import time
 from typing import List, Optional
 
 import numpy as np
+
+from repro.obs import NOOP
 
 NEG = np.iinfo(np.int32).min
 
@@ -60,17 +63,22 @@ class _Run:
     """One sorted spill run with buffered sequential reads."""
 
     def __init__(self, states, prio, ub, backend: str, spill_dir: str,
-                 run_id: int, buffer_size: int):
+                 run_id: int, buffer_size: int, obs=NOOP):
         self.n = len(prio)
         self.cursor = 0
         self.buffer_size = buffer_size
         self._buf_start = 0
+        self._obs = obs
         if backend == "disk":
+            t0 = time.perf_counter() if obs.enabled else 0.0
             self._paths = {}
             for name, arr in (("states", states), ("prio", prio), ("ub", ub)):
                 path = os.path.join(spill_dir, f"run{run_id}_{name}.npy")
                 np.save(path, arr)
                 self._paths[name] = path
+            if obs.enabled:
+                obs.counter("vpq_disk_write_seconds_total").inc(
+                    time.perf_counter() - t0)
             self._states = np.load(self._paths["states"], mmap_mode="r")
             self._prio = np.load(self._paths["prio"], mmap_mode="r")
             self._ub = np.load(self._paths["ub"], mmap_mode="r")
@@ -83,9 +91,14 @@ class _Run:
         s, e = self.cursor, min(self.cursor + self.buffer_size, self.n)
         self._buf_start = s
         # one sequential block read per refill (the paper's buffering)
+        time_it = self._paths is not None and self._obs.enabled
+        t0 = time.perf_counter() if time_it else 0.0
         self._bstates = np.array(self._states[s:e])
         self._bprio = np.array(self._prio[s:e])
         self._bub = np.array(self._ub[s:e])
+        if time_it:
+            self._obs.counter("vpq_disk_read_seconds_total").inc(
+                time.perf_counter() - t0)
 
     def head_prio(self) -> int:
         return int(self._bprio[self.cursor - self._buf_start])
@@ -139,7 +152,7 @@ class _Run:
 
     @classmethod
     def _restore(cls, n: int, cursor: int, buffer_size: int,
-                 arrays=None, paths=None) -> "_Run":
+                 arrays=None, paths=None, obs=NOOP) -> "_Run":
         """Rebuild a run from checkpointed data: host arrays (already
         sliced to the unconsumed remainder, cursor 0) or disk file paths
         (full run files, cursor preserved).  Byte parity needs only the
@@ -151,6 +164,7 @@ class _Run:
         run.cursor = cursor
         run.buffer_size = buffer_size
         run._buf_start = 0
+        run._obs = obs
         if paths is not None:
             run._paths = dict(paths)
             run._states = np.load(paths["states"], mmap_mode="r")
@@ -167,12 +181,23 @@ class VirtualPriorityQueue:
     def __init__(self, state_width: int, backend: str = "host",
                  spill_dir: Optional[str] = None,
                  buffer_size: int = 8192,
-                 run_flush_size: int = 1 << 15):
+                 run_flush_size: int = 1 << 15,
+                 obs=None):
         assert backend in ("host", "disk", "none")
         self.state_width = state_width
         self.backend = backend
         self.buffer_size = buffer_size
         self.run_flush_size = run_flush_size
+        # observability handles, resolved once (DESIGN.md §16)
+        self.obs = obs if obs is not None else NOOP
+        self._m_spilled = self.obs.counter(
+            "vpq_spilled_entries_total", "entries spilled off-device")
+        self._m_spill_bytes = self.obs.counter(
+            "vpq_spill_bytes_total", "bytes pushed into spill runs")
+        self._m_refill_bytes = self.obs.counter(
+            "vpq_refill_bytes_total", "bytes returned by pop_chunk")
+        self._m_late_pruned = self.obs.counter(
+            "vpq_late_pruned_total", "dominated entries dropped on refill")
         self.runs: List[_Run] = []
         self._pending: List[tuple] = []   # (states, prio, ub) awaiting a run
         self._pending_n = 0
@@ -201,6 +226,8 @@ class VirtualPriorityQueue:
                 "pool_capacity or enable the virtual priority queue")
         states, prio, ub = states[mask], prio[mask], ub[mask]
         self.total_spilled += len(prio)
+        self._m_spilled.inc(len(prio))
+        self._m_spill_bytes.inc(states.nbytes + prio.nbytes + ub.nbytes)
         self._pending.append((states, prio, ub))
         self._pending_n += len(prio)
         if self._pending_n >= self.run_flush_size:
@@ -215,7 +242,8 @@ class VirtualPriorityQueue:
         order = np.argsort(prio, kind="stable")[::-1]  # decreasing priority
         self.runs.append(_Run(
             np.ascontiguousarray(states[order]), prio[order], ub[order],
-            self.backend, self.spill_dir, self._run_id, self.buffer_size))
+            self.backend, self.spill_dir, self._run_id, self.buffer_size,
+            obs=self.obs))
         self._run_id += 1
         self._pending, self._pending_n = [], 0
 
@@ -247,6 +275,7 @@ class VirtualPriorityQueue:
         self._flush_pending()
         out_s, out_p, out_u = [], [], []
         need = n
+        late_pruned0 = self.total_late_pruned
         live = [r for r in self.runs if not r.exhausted]
         while need > 0 and live:
             blocks = [r.buffered() for r in live]
@@ -306,11 +335,15 @@ class VirtualPriorityQueue:
             else:
                 keep_runs.append(r)
         self.runs = keep_runs
+        self._m_late_pruned.inc(self.total_late_pruned - late_pruned0)
         if not out_p:
             return (np.zeros((0, self.state_width), np.int32),
                     np.zeros((0,), np.int32), np.zeros((0,), np.int32))
-        return (np.concatenate(out_s).astype(np.int32),
-                np.concatenate(out_p), np.concatenate(out_u).astype(np.int32))
+        out = (np.concatenate(out_s).astype(np.int32),
+               np.concatenate(out_p),
+               np.concatenate(out_u).astype(np.int32))
+        self._m_refill_bytes.inc(sum(a.nbytes for a in out))
+        return out
 
     def close(self):
         for r in self.runs:
@@ -374,7 +407,8 @@ class VirtualPriorityQueue:
 
     @classmethod
     def restore(cls, manifest: dict, src_dir: str,
-                spill_dir: Optional[str] = None) -> "VirtualPriorityQueue":
+                spill_dir: Optional[str] = None,
+                obs=None) -> "VirtualPriorityQueue":
         """Rebuild a queue from :meth:`snapshot` output.
 
         Disk runs are re-linked from the checkpoint into the *live* spill
@@ -386,7 +420,8 @@ class VirtualPriorityQueue:
         vpq = cls(state_width=int(manifest["state_width"]),
                   backend=manifest["backend"], spill_dir=spill_dir,
                   buffer_size=int(manifest["buffer_size"]),
-                  run_flush_size=int(manifest["run_flush_size"]))
+                  run_flush_size=int(manifest["run_flush_size"]),
+                  obs=obs)
         vpq.total_spilled = int(manifest["total_spilled"])
         vpq.total_late_pruned = int(manifest["total_late_pruned"])
         vpq._run_id = int(manifest["run_id"])
@@ -401,14 +436,14 @@ class VirtualPriorityQueue:
                     paths[name] = dst
                 vpq.runs.append(_Run._restore(
                     int(entry["n"]), int(entry["cursor"]),
-                    vpq.buffer_size, paths=paths))
+                    vpq.buffer_size, paths=paths, obs=vpq.obs))
             else:
                 arrays = tuple(
                     np.load(os.path.join(src_dir, entry["files"][name]))
                     for name in ("states", "prio", "ub"))
                 vpq.runs.append(_Run._restore(
                     int(entry["n"]), int(entry["cursor"]),
-                    vpq.buffer_size, arrays=arrays))
+                    vpq.buffer_size, arrays=arrays, obs=vpq.obs))
         if manifest.get("pending"):
             arrays = tuple(
                 np.load(os.path.join(src_dir, manifest["pending"][name]))

@@ -74,6 +74,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import List, Optional
 
 import numpy as np
@@ -195,6 +196,17 @@ class ShardedEngine:
         self.B, self.C, self.M = self._eng.B, self._eng.C, self._eng.M
         self.S, self.k = self._eng.S, config.k
 
+        # observability (DESIGN.md §16): share the inner engine's instance
+        # (dataclasses.replace copied the observe/observability fields) so
+        # sharded and per-shard telemetry land in one registry
+        self.obs = self._eng.obs
+        self._span = self.obs.tracer.span
+        self._m_rebalanced = self.obs.counter(
+            "engine_rebalanced_total",
+            "spilled entries moved across shards")
+        self._m_syncs = self.obs.counter(
+            "engine_syncs_total", "bound-exchange collectives run")
+
         sync = make_sharded_bound_sync("data", self.k)
         spec = P("data")
 
@@ -262,13 +274,18 @@ class ShardedEngine:
     # ----------------------------------------------------------------- start
     def start(self) -> ShardedEngineState:
         """Seed-partition the frontier and return a resumable state."""
+        with self._span("engine.start"):
+            return self._start_impl()
+
+    def _start_impl(self) -> ShardedEngineState:
         cfg, S, C, k, shards = self.cfg, self.S, self.C, self.k, self.shards
         vpqs = []
         for i in range(shards):
             sub = (os.path.join(cfg.spill_dir, f"shard{i}")
                    if cfg.spill_dir is not None else None)
             vpqs.append(VirtualPriorityQueue(
-                state_width=S, backend=cfg.spill, spill_dir=sub))
+                state_width=S, backend=cfg.spill, spill_dir=sub,
+                obs=self.obs))
 
         states0, prio0, ub0 = (np.asarray(a) for a in
                                self.comp.init_frontier())
@@ -308,65 +325,97 @@ class ShardedEngine:
         the same count for any ``steps_per_sync``.
         """
         shards, cap = self.shards, self._eng.acc_cap
+        t0 = time.perf_counter() if self.obs.enabled else 0.0
         if self.T == 1:
-            (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
-             st.result_keys, overflow, stats) = self._step_sharded(
-                st.pool_states, st.pool_prio, st.pool_ub,
-                st.result_states, st.result_keys)
-            stats = jax.device_get(stats)         # each value: [shards]
-            o_s, o_p, o_u = (np.asarray(a) for a in overflow)
-            o_per = len(o_p) // shards
+            with self._span("engine.step"):
+                with self._span("engine.device_compute"):
+                    (st.pool_states, st.pool_prio, st.pool_ub,
+                     st.result_states, st.result_keys, overflow,
+                     stats) = self._step_sharded(
+                        st.pool_states, st.pool_prio, st.pool_ub,
+                        st.result_states, st.result_keys)
+                with self._span("engine.host_sync"):
+                    stats = jax.device_get(stats)  # each value: [shards]
+                    o_s, o_p, o_u = (np.asarray(a) for a in overflow)
+                o_per = len(o_p) // shards
 
-            st.steps += 1
-            st.syncs += 1          # one §4 exchange per unfused step
-            st.host_syncs += 1
-            st.expanded += int(stats["expanded"].sum())
-            st.candidates += int(stats["created"].sum())
-            st.pruned += int(stats["pruned"].sum())
-            st.threshold = int(stats["threshold"][0])  # replicated, §4 sync
-            occ = stats["pool_occupancy"].astype(np.int64)
+                st.steps += 1
+                st.syncs += 1          # one §4 exchange per unfused step
+                st.host_syncs += 1
+                st.expanded += int(stats["expanded"].sum())
+                st.candidates += int(stats["created"].sum())
+                st.pruned += int(stats["pruned"].sum())
+                st.threshold = int(stats["threshold"][0])  # replicated, §4
+                occ = stats["pool_occupancy"].astype(np.int64)
 
-            for i in range(shards):
-                sl = slice(i * o_per, (i + 1) * o_per)
-                st.vpqs[i].maybe_push(o_s[sl], o_p[sl], o_u[sl])
-            return self._refill_rebalance(st, occ)
+                with self._span("engine.spill"):
+                    for i in range(shards):
+                        sl = slice(i * o_per, (i + 1) * o_per)
+                        st.vpqs[i].maybe_push(o_s[sl], o_p[sl], o_u[sl])
+                st = self._refill_rebalance(st, occ)
+            self._after_step(st, 1, 1, stats, t0)
+            return st
 
         t_cap = (self.T if max_inner is None
                  else max(1, min(self.T, int(max_inner))))
-        (st.pool_states, st.pool_prio, st.pool_ub, st.result_states,
-         st.result_keys, acc_s, acc_p, acc_u, stats) = self._macro_sharded(
-            st.pool_states, st.pool_prio, st.pool_ub,
-            st.result_states, st.result_keys, np.int32(t_cap),
-            np.asarray([len(v) > 0 for v in st.vpqs]),
-            st.pool_occupancy.astype(np.int32))
-        stats = jax.device_get(stats)             # each value: [shards]
-        n = int(stats["steps"][0])                # uniform: global exit vote
-        st.steps += n
-        # every segment opens with one fresh exchange and runs <= K steps,
-        # and fused calls end on segment boundaries (T is a multiple of K),
-        # so the collectives this call ran are exactly ceil(n / K)
-        st.syncs += -(-n // self.K)
-        st.host_syncs += 1
-        if self.cfg.record_bound_trace:
-            st.bound_used.append(np.asarray(stats["bound_used"])[:, :n])
-            st.bound_fresh.append(np.asarray(stats["bound_fresh"])[:, :n])
-        st.expanded += int(stats["expanded"].sum())
-        st.candidates += int(stats["created"].sum())
-        st.pruned += int(stats["pruned"].sum())
-        st.threshold = int(stats["threshold"][0])
-        occ = stats["pool_occupancy"].astype(np.int64)
-        spill = stats["spill_count"]
-        if spill.any():   # ship only each shard's valid accumulator prefix
-            acc_s, acc_p, acc_u = (np.asarray(a)
-                                   for a in (acc_s, acc_p, acc_u))
-            for i in range(shards):
-                w = int(spill[i])
-                if w:
-                    base = i * cap
-                    st.vpqs[i].maybe_push(acc_s[base:base + w],
-                                          acc_p[base:base + w],
-                                          acc_u[base:base + w])
-        return self._refill_rebalance(st, occ)
+        with self._span("engine.step"):
+            with self._span("engine.device_compute"):
+                (st.pool_states, st.pool_prio, st.pool_ub,
+                 st.result_states, st.result_keys, acc_s, acc_p, acc_u,
+                 stats) = self._macro_sharded(
+                    st.pool_states, st.pool_prio, st.pool_ub,
+                    st.result_states, st.result_keys, np.int32(t_cap),
+                    np.asarray([len(v) > 0 for v in st.vpqs]),
+                    st.pool_occupancy.astype(np.int32))
+            with self._span("engine.host_sync"):
+                stats = jax.device_get(stats)     # each value: [shards]
+            n = int(stats["steps"][0])            # uniform: global exit vote
+            st.steps += n
+            # every segment opens with one fresh exchange and runs <= K
+            # steps, and fused calls end on segment boundaries (T is a
+            # multiple of K), so this call ran exactly ceil(n / K)
+            # collectives
+            st.syncs += -(-n // self.K)
+            st.host_syncs += 1
+            if self.cfg.record_bound_trace:
+                st.bound_used.append(np.asarray(stats["bound_used"])[:, :n])
+                st.bound_fresh.append(
+                    np.asarray(stats["bound_fresh"])[:, :n])
+            st.expanded += int(stats["expanded"].sum())
+            st.candidates += int(stats["created"].sum())
+            st.pruned += int(stats["pruned"].sum())
+            st.threshold = int(stats["threshold"][0])
+            occ = stats["pool_occupancy"].astype(np.int64)
+            spill = stats["spill_count"]
+            if spill.any():   # ship each shard's valid accumulator prefix
+                acc_s, acc_p, acc_u = (np.asarray(a)
+                                       for a in (acc_s, acc_p, acc_u))
+                with self._span("engine.spill"):
+                    for i in range(shards):
+                        w = int(spill[i])
+                        if w:
+                            base = i * cap
+                            st.vpqs[i].maybe_push(acc_s[base:base + w],
+                                                  acc_p[base:base + w],
+                                                  acc_u[base:base + w])
+            st = self._refill_rebalance(st, occ)
+        self._after_step(st, n, -(-n // self.K), stats, t0)
+        return st
+
+    def _after_step(self, st: ShardedEngineState, n_steps: int,
+                    n_syncs: int, stats: dict, t0: float) -> None:
+        """Record one step() call's metrics (no-op handles when off)."""
+        eng = self._eng
+        eng._m_steps.inc(n_steps)
+        eng._m_host_syncs.inc()
+        self._m_syncs.inc(n_syncs)
+        eng._m_expanded.inc(int(stats["expanded"].sum()))
+        eng._m_candidates.inc(int(stats["created"].sum()))
+        eng._m_pruned.inc(int(stats["pruned"].sum()))
+        eng._g_occupancy.set(int(st.pool_occupancy.sum()))
+        eng._g_threshold.set(st.threshold)
+        if self.obs.enabled:
+            eng._h_step.observe(time.perf_counter() - t0)
 
     # ----------------------------------------------------- refill/rebalance
     def _refill_rebalance(self, st: ShardedEngineState,
@@ -377,40 +426,48 @@ class ShardedEngine:
         blk_p = np.full((shards, C), NEG, np.int32)
         blk_u = np.full((shards, C), NEG, np.int32)
         fill = np.zeros(shards, np.int64)
-        for i in range(shards):
-            if occ[i] < C // 2 and len(st.vpqs[i]):
-                r_s, r_p, r_u = st.vpqs[i].pop_chunk(
-                    C - int(occ[i]), min_ub=st.threshold)
-                r = len(r_p)
-                if r:
-                    blk_s[i, :r], blk_p[i, :r], blk_u[i, :r] = r_s, r_p, r_u
-                    fill[i] = r
-                    st.refilled += r
+        if any(occ[i] < C // 2 and len(st.vpqs[i]) for i in range(shards)):
+            with self._span("engine.refill"):
+                for i in range(shards):
+                    if occ[i] < C // 2 and len(st.vpqs[i]):
+                        r_s, r_p, r_u = st.vpqs[i].pop_chunk(
+                            C - int(occ[i]), min_ub=st.threshold)
+                        r = len(r_p)
+                        if r:
+                            blk_s[i, :r], blk_p[i, :r], blk_u[i, :r] = \
+                                r_s, r_p, r_u
+                            fill[i] = r
+                            st.refilled += r
+                            self._eng._m_refilled.inc(r)
 
         # ---- rebalance: shards that cannot refill themselves pull spilled
         # work from the most-loaded VPQs (priority order preserved: the
         # donor pop is a sorted k-way merge, the insert a merge-sort)
         needy = [i for i in range(shards)
                  if occ[i] + fill[i] < C // 2 and len(st.vpqs[i]) == 0]
-        donors = sorted((i for i in range(shards) if len(st.vpqs[i])),
-                        key=lambda i: -len(st.vpqs[i]))
-        for i in needy:
-            for d in donors:
-                room = C // 2 - int(occ[i] + fill[i])
-                if room <= 0:
-                    break
-                if not len(st.vpqs[d]):
-                    continue
-                m_s, m_p, m_u = st.vpqs[d].pop_chunk(
-                    min(room, len(st.vpqs[d])), min_ub=st.threshold)
-                m = len(m_p)
-                if m:
-                    off = int(fill[i])
-                    blk_s[i, off:off + m] = m_s
-                    blk_p[i, off:off + m] = m_p
-                    blk_u[i, off:off + m] = m_u
-                    fill[i] += m
-                    st.rebalanced += m
+        if needy:
+            with self._span("engine.rebalance"):
+                donors = sorted(
+                    (i for i in range(shards) if len(st.vpqs[i])),
+                    key=lambda i: -len(st.vpqs[i]))
+                for i in needy:
+                    for d in donors:
+                        room = C // 2 - int(occ[i] + fill[i])
+                        if room <= 0:
+                            break
+                        if not len(st.vpqs[d]):
+                            continue
+                        m_s, m_p, m_u = st.vpqs[d].pop_chunk(
+                            min(room, len(st.vpqs[d])), min_ub=st.threshold)
+                        m = len(m_p)
+                        if m:
+                            off = int(fill[i])
+                            blk_s[i, off:off + m] = m_s
+                            blk_p[i, off:off + m] = m_p
+                            blk_u[i, off:off + m] = m_u
+                            fill[i] += m
+                            st.rebalanced += m
+                            self._m_rebalanced.inc(m)
 
         if fill.any():
             (st.pool_states, st.pool_prio, st.pool_ub, ov_s, ov_p, ov_u) = \
@@ -435,6 +492,10 @@ class ShardedEngine:
     # -------------------------------------------------------------- finalize
     def finalize(self, st: ShardedEngineState) -> EngineResult:
         """Merge per-shard result sets canonically, close VPQs, package."""
+        with self._span("engine.finalize"):
+            return self._finalize_impl(st)
+
+    def _finalize_impl(self, st: ShardedEngineState) -> EngineResult:
         result_states, result_keys = merge_topk(
             st.result_states, st.result_keys, self.k)
         per_shard = dict(
@@ -495,7 +556,7 @@ class ShardedEngine:
         been written at the same shard count."""
         from repro.checkpoint.manager import CheckpointManager
         mgr = (source if isinstance(source, CheckpointManager)
-               else CheckpointManager(source))
+               else CheckpointManager(source, obs=self.obs))
         manifest = mgr.read_manifest(step)
         step = manifest["step"]
         extra = manifest["extra"]
@@ -518,7 +579,7 @@ class ShardedEngine:
                    if self.cfg.spill_dir is not None else None)
             vpqs.append(VirtualPriorityQueue.restore(
                 vman, os.path.join(mgr.path(step), "vpq", f"shard{i}"),
-                spill_dir=sub))
+                spill_dir=sub, obs=self.obs))
         scalars = dict(extra["scalars"])
         occ = np.asarray(scalars.pop("pool_occupancy"), np.int64)
         return ShardedEngineState(
@@ -538,7 +599,7 @@ class ShardedEngine:
         if self.cfg.checkpoint_dir and (self.cfg.checkpoint_every > 0
                                         or resume):
             from repro.checkpoint.manager import CheckpointManager
-            mgr = CheckpointManager(self.cfg.checkpoint_dir)
+            mgr = CheckpointManager(self.cfg.checkpoint_dir, obs=self.obs)
         st = None
         if resume and mgr is not None and mgr.latest_step() is not None:
             st = self.resume(mgr)

@@ -20,6 +20,13 @@ after every flushed batch so an external supervisor can detect a hung or
 killed loop (:class:`repro.runtime.fault_tolerance.Heartbeat`) and
 trigger exactly that restart.
 
+Observability (DESIGN.md §16): ``--metrics-dump PATH`` turns on the
+process-wide metrics registry and rewrites ``PATH`` with a JSON snapshot
+(all counters/gauges/histograms plus span-buffer stats) after every
+flushed batch — a scrape-friendly sidecar file.  A control line
+``{"cmd": "metrics"}`` in the request stream flushes pending requests and
+replies inline with the same live snapshot.
+
 Request schema: docs/API.md; per-workload walkthroughs: docs/WORKLOADS.md.
 """
 from __future__ import annotations
@@ -27,6 +34,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import sys
 
 
@@ -52,7 +60,8 @@ def make_demo_registry():
 
 def serve_discovery(lines=None, out=None, slice_steps: int = 1,
                     batch_size: int = 8, resume: bool = False,
-                    heartbeat: str = None):
+                    heartbeat: str = None, metrics_dump: str = None,
+                    observability=None):
     """Minimal request loop: one JSON request per input line, one JSON
     response per output line (order-preserving).
 
@@ -61,13 +70,20 @@ def serve_discovery(lines=None, out=None, slice_steps: int = 1,
     within and across batches hit the result cache.  ``resume=True``
     (the ``--resume`` restart path) forces every checkpointed request to
     continue from its newest committed step instead of starting over;
-    ``heartbeat`` names a liveness file beaten after every flushed batch.
+    ``heartbeat`` names a liveness file beaten after every flushed batch;
+    ``metrics_dump`` names a JSON file rewritten with the live metrics
+    snapshot after every flush (``observability`` overrides the registry
+    used — by default one is created whenever ``metrics_dump`` is set).
     """
     from repro.service import (DiscoveryRequest, DiscoveryResponse,
                                DiscoveryService)
+    from repro.obs import NOOP, Observability
 
+    obs = observability
+    if obs is None:
+        obs = Observability() if metrics_dump else NOOP
     svc = DiscoveryService(registry=make_demo_registry(),
-                           slice_steps=slice_steps)
+                           slice_steps=slice_steps, observability=obs)
     lines = sys.stdin if lines is None else lines
     out = sys.stdout if out is None else out
     hb = None
@@ -77,6 +93,13 @@ def serve_discovery(lines=None, out=None, slice_steps: int = 1,
 
     batch = []
     flushed = [0]
+
+    def dump_metrics():
+        if metrics_dump:
+            tmp = metrics_dump + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(obs.snapshot(), f, indent=1)
+            os.replace(tmp, metrics_dump)  # readers never see a torn file
 
     def flush():
         if not batch:
@@ -89,6 +112,7 @@ def serve_discovery(lines=None, out=None, slice_steps: int = 1,
         flushed[0] += 1
         if hb is not None:
             hb.beat(flushed[0])
+        dump_metrics()
 
     for line in lines:
         line = line.strip()
@@ -97,6 +121,19 @@ def serve_discovery(lines=None, out=None, slice_steps: int = 1,
         d = {}
         try:
             d = json.loads(line)
+            if isinstance(d, dict) and "cmd" in d:
+                # control request: flush queued work first so the reply
+                # reflects every request that preceded it on the stream
+                flush()
+                if d["cmd"] == "metrics":
+                    reply = {"cmd": "metrics", "status": "ok",
+                             "enabled": obs.enabled,
+                             "snapshot": obs.snapshot()}
+                else:
+                    reply = {"cmd": d["cmd"], "status": "error",
+                             "error": f"unknown cmd: {d['cmd']!r}"}
+                print(json.dumps(reply), file=out, flush=True)
+                continue
             req = DiscoveryRequest.from_dict(d)
             if resume and req.checkpoint_dir:
                 req = dataclasses.replace(req, resume=True)
@@ -113,6 +150,7 @@ def serve_discovery(lines=None, out=None, slice_steps: int = 1,
         if len(batch) >= batch_size:
             flush()
     flush()
+    dump_metrics()   # final snapshot even when the tail batch was empty
     return svc
 
 
@@ -128,12 +166,17 @@ def main():
                          "kill-and-resume cycle; DESIGN.md §15)")
     ap.add_argument("--heartbeat", default=None, metavar="PATH",
                     help="liveness file beaten after every flushed batch")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="enable the metrics registry and rewrite PATH "
+                         "with a JSON snapshot after every flushed batch "
+                         "(DESIGN.md §16)")
     args = ap.parse_args()
     lines = open(args.requests) if args.requests else None
     try:
         svc = serve_discovery(lines=lines, slice_steps=args.slice_steps,
                               batch_size=args.batch_size,
-                              resume=args.resume, heartbeat=args.heartbeat)
+                              resume=args.resume, heartbeat=args.heartbeat,
+                              metrics_dump=args.metrics_dump)
     finally:
         if lines is not None:
             lines.close()

@@ -17,18 +17,25 @@ from __future__ import annotations
 
 import os
 import time
+from collections import deque
 from typing import Optional
 
 
 class StragglerMonitor:
+    """``events`` keeps only the newest ``max_events`` straggler records
+    (a long-lived serving query would otherwise grow it without bound);
+    ``straggler_steps`` is the monotone total and is what response stats
+    report."""
+
     def __init__(self, threshold: float = 2.5, ema: float = 0.9,
-                 warmup_steps: int = 3):
+                 warmup_steps: int = 3, max_events: int = 256):
         self.threshold = threshold
         self.ema_factor = ema
         self.warmup = warmup_steps
         self.ema: Optional[float] = None
         self.seen = 0
-        self.events: list = []
+        self.straggler_steps = 0
+        self.events: deque = deque(maxlen=max_events)
 
     def record(self, step: int, duration: float) -> bool:
         """Returns True when this step is a straggler."""
@@ -39,6 +46,7 @@ class StragglerMonitor:
             return False
         is_straggler = duration > self.threshold * self.ema
         if is_straggler:
+            self.straggler_steps += 1
             self.events.append((step, duration, self.ema))
         else:
             self.ema = self.ema_factor * self.ema + \

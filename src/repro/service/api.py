@@ -141,6 +141,13 @@ class DiscoveryRequest:
     checkpoint_every: int = 0
     checkpoint_dir: Optional[str] = None
     resume: bool = False
+    # observability (DESIGN.md §16): observe=True routes this query's
+    # engine metrics/spans into the service's live Observability (or a
+    # private one for direct compile_request callers).  A pure observer
+    # like checkpointing — results are byte-identical either way
+    # (parity-tested in tests/test_obs.py) — so it is EXCLUDED from the
+    # result-cache key but part of the engine-reuse key.
+    observe: bool = False
     # service knobs
     use_cache: bool = True
     request_id: Optional[str] = None
@@ -160,7 +167,7 @@ class DiscoveryRequest:
                 if d.get(f) is not None:
                     d[f] = int(d[f])
             for f in ("induced", "use_pallas", "use_cache", "interpret",
-                      "resume"):
+                      "resume", "observe"):
                 if d.get(f) is not None:
                     d[f] = bool(d[f])
             if d.get("label_filter") is not None:
@@ -327,7 +334,11 @@ class DiscoveryRequest:
         resumed run is byte-identical to an uninterrupted one, so
         checkpointed, resumed, and plain runs of the same query share one
         cache entry; the first two join the engine-reuse key — tasks
-        sharing an engine share its checkpoint policy).
+        sharing an engine share its checkpoint policy).  ``observe`` is
+        excluded by the same pure-observer discipline (DESIGN.md §16:
+        metrics and spans never touch the step trajectory — parity-tested
+        in tests/test_obs.py), so instrumented and plain runs of the same
+        query share one cache entry; it joins the engine-reuse key.
         ``shards`` IS included, like
         ``batch``/``pool_capacity``:
         complete runs are shard-count invariant, but a run truncated by
@@ -444,7 +455,8 @@ def compile_request(req: DiscoveryRequest, registry: GraphRegistry,
                        sync_every=req.sync_every,
                        checkpoint_every=req.checkpoint_every,
                        checkpoint_dir=req.checkpoint_dir,
-                       use_pallas=req.use_pallas, interpret=req.interpret)
+                       use_pallas=req.use_pallas, interpret=req.interpret,
+                       observe=req.observe)
 
     if req.workload == "clique":
         from repro.core.clique import make_clique_computation

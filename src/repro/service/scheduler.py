@@ -23,6 +23,7 @@ from typing import Dict, List, Optional
 from repro.core.aggregate import TopKPatternMiner
 from repro.core.engine import NEG, Engine
 from repro.core.graph import GraphStore
+from repro.obs import NOOP
 from repro.runtime.fault_tolerance import StragglerMonitor
 
 from .api import (DiscoveryRequest, DiscoveryResponse, GraphRegistry,
@@ -40,10 +41,16 @@ class EngineQueryTask:
     avoiding an XLA re-trace per request.
     """
 
-    def __init__(self, request: DiscoveryRequest, engine: Engine):
+    def __init__(self, request: DiscoveryRequest, engine: Engine,
+                 obs=NOOP):
         self.request = request
         self.comp = engine.comp
         self.engine = engine
+        # queue-wait attribution (DESIGN.md §16): time from admission to
+        # this task's first scheduled step under the round-robin
+        self._obs = obs
+        self._admitted = time.perf_counter() if obs.enabled else 0.0
+        self._started = False
         # durable runs (DESIGN.md §15): resume re-admits the query from the
         # newest committed checkpoint; checkpoint_every persists it as it
         # steps.  The restored state carries its step count, so the
@@ -91,6 +98,13 @@ class EngineQueryTask:
         # super-steps); capping the fused count to the remaining budget
         # keeps step_budget truncation exact for any steps_per_sync
         t0 = time.perf_counter()
+        if not self._started:
+            self._started = True
+            if self._obs.enabled:
+                self._obs.histogram(
+                    "service_queue_wait_seconds",
+                    "admission-to-first-step wait under the scheduler"
+                ).observe(t0 - self._admitted)
         self.engine.step(self.state,
                          max_inner=self.request.step_budget
                          - self.state.steps)
@@ -138,7 +152,7 @@ class EngineQueryTask:
                        rebalanced=res.rebalanced,
                        late_pruned=res.late_pruned,
                        syncs=res.syncs, host_syncs=res.host_syncs,
-                       straggler_steps=len(self.straggler.events)),
+                       straggler_steps=self.straggler.straggler_steps),
             terminated=self.terminated or "complete")
         return self._payload
 
@@ -155,8 +169,12 @@ class PatternQueryTask:
     not inside the miner.
     """
 
-    def __init__(self, req: DiscoveryRequest, graph: GraphStore):
+    def __init__(self, req: DiscoveryRequest, graph: GraphStore,
+                 obs=NOOP):
         self.request = req
+        self._obs = obs
+        self._admitted = time.perf_counter() if obs.enabled else 0.0
+        self._started = False
         # the miner keeps its library-default runaway cap; the service
         # budget is enforced here, between steps, with the same inclusive
         # (>=) semantics as EngineQueryTask for every workload
@@ -184,6 +202,13 @@ class PatternQueryTask:
         if self.finished:
             return
         t0 = time.perf_counter()
+        if not self._started:
+            self._started = True
+            if self._obs.enabled:
+                self._obs.histogram(
+                    "service_queue_wait_seconds",
+                    "admission-to-first-step wait under the scheduler"
+                ).observe(t0 - self._admitted)
         self.miner.step()
         self.straggler.record(self.miner.steps, time.perf_counter() - t0)
         if self.miner.done:
@@ -207,7 +232,7 @@ class PatternQueryTask:
                        expanded=res.groups_expanded,
                        pruned=res.groups_pruned, spilled=0, refilled=0,
                        rebalanced=0, late_pruned=0,
-                       straggler_steps=len(self.straggler.events)),
+                       straggler_steps=self.straggler.straggler_steps),
             terminated=self.terminated or "complete")
         return self._payload
 
@@ -253,7 +278,8 @@ class DiscoveryService:
 
     def __init__(self, registry: Optional[GraphRegistry] = None,
                  cache: Optional[ResultCache] = None,
-                 slice_steps: int = 1, engine_cache_size: int = 32):
+                 slice_steps: int = 1, engine_cache_size: int = 32,
+                 observability=None):
         self.registry = registry or GraphRegistry()
         self.cache = cache or ResultCache()
         self.scheduler = QueryScheduler(slice_steps=slice_steps)
@@ -265,6 +291,24 @@ class DiscoveryService:
                                     ttl_s=float("inf"))
         self.engine_steps_total = 0
         self.requests_served = 0
+        # observability (DESIGN.md §16): one shared registry for service
+        # counters AND (via _make_task injection) the engines of observe=
+        # True requests, so /metrics answers for the whole stack at once
+        self.obs = observability if observability is not None else NOOP
+        self._m_requests = self.obs.counter(
+            "service_requests_total", "requests received")
+        self._m_cache_hits = self.obs.counter(
+            "service_cache_hits_total", "result-cache hits")
+        self._m_cache_misses = self.obs.counter(
+            "service_cache_misses_total",
+            "result-cache misses (executed queries)")
+        self._m_validation_errors = self.obs.counter(
+            "service_validation_errors_total", "rejected requests")
+        self._m_engine_steps = self.obs.counter(
+            "service_engine_steps_total",
+            "engine super-steps run on behalf of this service")
+        self._h_request = self.obs.histogram(
+            "service_request_seconds", "per-request wall time")
 
     def register_graph(self, name: str, graph) -> None:
         self.registry.register(name, graph)
@@ -274,6 +318,7 @@ class DiscoveryService:
               ) -> List[DiscoveryResponse]:
         """Serve a batch; responses come back in request order."""
         t0 = time.perf_counter()
+        self._m_requests.inc(len(requests))
         responses: List[Optional[DiscoveryResponse]] = [None] * len(requests)
         pending: List[tuple] = []      # (indices, cache_key|None, task)
         by_key: Dict[str, tuple] = {}  # within-batch dedup of identical specs
@@ -287,18 +332,22 @@ class DiscoveryService:
                 if req.use_cache:
                     payload = self.cache.get(key)
                     if payload is not None:
+                        self._m_cache_hits.inc()
+                        lat = time.perf_counter() - t0
+                        self._h_request.observe(lat)
                         responses[i] = self._payload_to_response(
-                            req, payload, cached=True,
-                            latency_s=time.perf_counter() - t0)
+                            req, payload, cached=True, latency_s=lat)
                         continue
                     if key in by_key:  # identical spec already in this batch
                         by_key[key][0].append(i)
                         continue
                 entry = ([i], key if req.use_cache else None,
                          self._make_task(req, graph))
+                self._m_cache_misses.inc()
             except (TypeError, ValueError) as e:
                 # ValidationError and any mistyped field the validators
                 # trip over: reject this request, keep serving the batch
+                self._m_validation_errors.inc()
                 responses[i] = DiscoveryResponse(
                     request_id=req.request_id, workload=str(req.workload),
                     status="error", error=str(e))
@@ -307,21 +356,26 @@ class DiscoveryService:
             if req.use_cache:
                 by_key[key] = entry
 
-        self.scheduler.drive([task for _, _, task in pending])
+        with self.obs.span("service.drive"):
+            self.scheduler.drive([task for _, _, task in pending])
 
         for indices, key, task in pending:
             payload = task.finalize()
             if isinstance(task, EngineQueryTask):
                 # count only the steps this admission actually ran: a
                 # resumed state arrives carrying its pre-crash step count
-                self.engine_steps_total += (task.state.steps
-                                            - task.steps_at_admission)
+                ran = task.state.steps - task.steps_at_admission
+                self.engine_steps_total += ran
+                self._m_engine_steps.inc(ran)
             if key is not None:
                 self.cache.put(key, payload)
             for j, i in enumerate(indices):
+                if j > 0:   # within-batch dedup joins are cache hits too
+                    self._m_cache_hits.inc()
+                lat = time.perf_counter() - t0
+                self._h_request.observe(lat)
                 responses[i] = self._payload_to_response(
-                    requests[i], payload, cached=j > 0,
-                    latency_s=time.perf_counter() - t0)
+                    requests[i], payload, cached=j > 0, latency_s=lat)
 
         self.requests_served += len(requests)
         return responses   # type: ignore[return-value]
@@ -332,7 +386,7 @@ class DiscoveryService:
 
     def _make_task(self, req: DiscoveryRequest, graph: GraphStore):
         if req.workload == "pattern":
-            return PatternQueryTask(req, graph)
+            return PatternQueryTask(req, graph, obs=self.obs)
         # the engine key covers only what shapes the compiled step: budgets
         # are enforced per-task (so they're dropped from the spec), while
         # use_pallas/interpret/steps_per_sync/sync_every change the
@@ -352,17 +406,22 @@ class DiscoveryService:
         engine_spec["sync_every"] = req.sync_every
         engine_spec["checkpoint_every"] = req.checkpoint_every
         engine_spec["checkpoint_dir"] = req.checkpoint_dir
+        engine_spec["observe"] = req.observe
         engine_key = make_cache_key(graph.fingerprint, engine_spec)
         engine = self._engines.get(engine_key)
         if engine is None:
             compiled = compile_request(req, self.registry, graph=graph)
+            if req.observe and self.obs.enabled:
+                # observing engines record into the service registry so a
+                # single snapshot covers the whole process (DESIGN.md §16)
+                compiled.engine_cfg.observability = self.obs
             if compiled.engine_cfg.shards > 1:
                 from repro.distributed import ShardedEngine
                 engine = ShardedEngine(compiled.comp, compiled.engine_cfg)
             else:
                 engine = Engine(compiled.comp, compiled.engine_cfg)
             self._engines.put(engine_key, engine)
-        return EngineQueryTask(req, engine)
+        return EngineQueryTask(req, engine, obs=self.obs)
 
     @staticmethod
     def _payload_to_response(req: DiscoveryRequest, payload: dict,

@@ -1,0 +1,394 @@
+"""Observability subsystem (DESIGN.md §16): metrics registry semantics,
+span-tracer ring buffer + Chrome trace export, no-op identities, engine
+instrumentation parity (observe on == observe off, byte-for-byte), and
+service-layer metrics with the pure-observer cache-key discipline."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.clique import make_clique_computation
+from repro.core.engine import Engine, EngineConfig
+from repro.data.synthetic_graphs import densifying_graph
+from repro.obs import (NOOP, NULL_METRIC, NULL_REGISTRY, NULL_SPAN,
+                       NULL_TRACER, MetricsRegistry, Observability,
+                       SpanTracer, TOP_LEVEL_SPANS, aggregate, coverage,
+                       format_table, log_buckets)
+from repro.obs.metrics import DEFAULT_TIME_BUCKETS
+from repro.service import DiscoveryRequest, DiscoveryService
+
+
+# -------------------------------------------------------------- log_buckets
+def test_log_buckets_exact_decades():
+    assert log_buckets(1e-3, 1.0, per_decade=1) == \
+        pytest.approx((1e-3, 1e-2, 1e-1, 1.0))
+
+
+def test_log_buckets_per_decade_and_validation():
+    b = log_buckets(1e-2, 1.0, per_decade=2)
+    assert len(b) == 5 and b[0] == pytest.approx(1e-2) \
+        and b[-1] == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        log_buckets(0, 1.0)
+    with pytest.raises(ValueError):
+        log_buckets(1.0, 0.5)
+    with pytest.raises(ValueError):
+        log_buckets(1e-3, 1.0, per_decade=0)
+
+
+def test_default_time_buckets_span_and_monotone():
+    b = DEFAULT_TIME_BUCKETS
+    assert b[0] == pytest.approx(1e-6) and b[-1] == pytest.approx(100.0)
+    assert all(nxt > cur for cur, nxt in zip(b, b[1:]))
+
+
+# ---------------------------------------------------------- metric semantics
+def test_counter_monotone():
+    r = MetricsRegistry()
+    c = r.counter("c_total", "help text")
+    c.inc()
+    c.inc(4)
+    c.inc(0.5)
+    assert c.value == pytest.approx(5.5)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_last_write_wins():
+    g = MetricsRegistry().gauge("g")
+    g.set(7)
+    g.inc(3)
+    g.set(2)
+    assert g.value == 2
+
+
+def test_histogram_le_semantics():
+    # `le` is an *inclusive* upper edge: a value exactly on a bound lands
+    # in that bound's bucket, one ulp above lands in the next
+    h = MetricsRegistry().histogram("h", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 1.0):        # both <= 1.0
+        h.observe(v)
+    h.observe(1.0000001)        # (1, 10]
+    h.observe(100.0)            # (10, 100]
+    h.observe(1e9)              # +Inf overflow bucket
+    snap = h.snapshot()
+    assert snap["counts"] == [2, 1, 1, 1]
+    assert snap["count"] == 5
+    assert snap["sum"] == pytest.approx(0.5 + 1.0 + 1.0000001 + 100.0 + 1e9)
+
+
+def test_histogram_rejects_unsorted_buckets():
+    with pytest.raises(ValueError):
+        MetricsRegistry().histogram("h", buckets=(1.0, 1.0, 2.0))
+    with pytest.raises(ValueError):
+        MetricsRegistry().histogram("h2", buckets=(2.0, 1.0))
+
+
+def test_registry_get_or_create_and_kind_clash():
+    r = MetricsRegistry()
+    assert r.counter("x") is r.counter("x")
+    with pytest.raises(TypeError):
+        r.gauge("x")
+    assert r.get("x").kind == "counter"
+    assert r.get("missing") is None
+    r.gauge("a_gauge")
+    assert r.names() == ["a_gauge", "x"]
+
+
+def test_prometheus_exposition_round_trips():
+    r = MetricsRegistry()
+    r.counter("steps_total", "total steps").inc(42)
+    r.gauge("occupancy").set(17)
+    h = r.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = r.to_prometheus()
+    lines = text.strip().splitlines()
+    assert "# HELP steps_total total steps" in lines
+    assert "# TYPE steps_total counter" in lines
+    assert "steps_total 42" in lines
+    assert "occupancy 17" in lines
+    # histogram buckets are cumulative and end with +Inf == count
+    assert 'lat_seconds_bucket{le="0.1"} 1' in lines
+    assert 'lat_seconds_bucket{le="1"} 2' in lines
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in lines
+    assert "lat_seconds_count 3" in lines
+    # sample values round-trip through float()
+    for line in lines:
+        if not line.startswith("#"):
+            float(line.rsplit(" ", 1)[1])
+
+
+# ------------------------------------------------------------------- tracer
+def test_tracer_records_spans_with_duration():
+    t = SpanTracer(capacity=16)
+    with t.span("phase.a"):
+        pass
+    with t.span("phase.b"):
+        with t.span("phase.a"):
+            pass
+    spans = t.spans()
+    assert [s[0] for s in spans] == ["phase.a", "phase.a", "phase.b"]
+    assert all(s[2] >= 0 for s in spans)
+    # nested span closed first, so it precedes its parent in the buffer
+    assert t.total_recorded == 3 and t.dropped == 0
+
+
+def test_tracer_records_span_when_body_raises():
+    t = SpanTracer(capacity=4)
+    with pytest.raises(RuntimeError):
+        with t.span("doomed"):
+            raise RuntimeError("boom")
+    assert [s[0] for s in t.spans()] == ["doomed"]
+
+
+def test_tracer_ring_wraparound():
+    t = SpanTracer(capacity=4)
+    for i in range(10):
+        t._record(f"s{i}", float(i), 0.001)
+    assert t.total_recorded == 10
+    assert t.dropped == 6
+    # retained window is the newest 4, oldest first
+    assert [s[0] for s in t.spans()] == ["s6", "s7", "s8", "s9"]
+    t.clear()
+    assert t.spans() == [] and t.total_recorded == 0
+
+
+def test_chrome_trace_export(tmp_path):
+    t = SpanTracer(capacity=8)
+    with t.span("engine.step"):
+        pass
+    path = t.export_chrome_trace(str(tmp_path / "sub" / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["displayTimeUnit"] == "ms"
+    assert len(doc["traceEvents"]) == 1
+    ev = doc["traceEvents"][0]
+    assert ev["name"] == "engine.step" and ev["ph"] == "X"
+    for key in ("ts", "dur", "pid", "tid"):
+        assert isinstance(ev[key], (int, float))
+    assert ev["dur"] >= 0
+
+
+# ---------------------------------------------------------------- no-op path
+def test_noop_identities():
+    assert NOOP.enabled is False
+    assert NOOP.metrics is NULL_REGISTRY
+    assert NOOP.tracer is NULL_TRACER
+    # every metric resolves to the one shared null object
+    assert NOOP.counter("anything") is NULL_METRIC
+    assert NOOP.gauge("g") is NULL_METRIC
+    assert NOOP.histogram("h") is NULL_METRIC
+    # and the one shared null span
+    assert NOOP.tracer.span("s") is NULL_SPAN
+    with NOOP.span("s"):
+        pass
+    NULL_METRIC.inc()
+    NULL_METRIC.set(3)
+    NULL_METRIC.observe(0.5)
+    assert NULL_METRIC.value == 0 and NULL_METRIC.count == 0
+    assert NOOP.tracer.spans() == [] and NOOP.tracer.total_recorded == 0
+    assert NULL_REGISTRY.to_prometheus() == ""
+
+
+def test_noop_export_writes_empty_trace(tmp_path):
+    path = NOOP.tracer.export_chrome_trace(str(tmp_path / "t.json"))
+    with open(path) as f:
+        assert json.load(f)["traceEvents"] == []
+
+
+def test_snapshot_shapes():
+    obs = Observability(max_spans=8)
+    obs.counter("c").inc(2)
+    with obs.span("s"):
+        pass
+    snap = obs.snapshot()
+    assert snap["enabled"] is True
+    assert snap["metrics"]["c"]["value"] == 2
+    assert snap["spans"] == {"recorded": 1, "dropped": 0, "capacity": 8}
+    json.dumps(snap)   # JSON-serializable end to end
+    noop_snap = NOOP.snapshot()
+    assert noop_snap["enabled"] is False and noop_snap["metrics"] == {}
+
+
+# -------------------------------------------------------------------- report
+def test_aggregate_and_format_table():
+    spans = [("engine.step", 0.0, 0.2, 1), ("engine.step", 0.2, 0.4, 1),
+             ("engine.refill", 0.3, 0.1, 1)]
+    agg = aggregate(spans)
+    assert list(agg) == ["engine.step", "engine.refill"]   # total desc
+    assert agg["engine.step"] == {"count": 2, "total_s": pytest.approx(0.6),
+                                  "max_s": pytest.approx(0.4)}
+    table = format_table(spans, wall_s=1.0)
+    assert "engine.step" in table and "% wall" in table
+    assert "coverage" in table
+    # nested spans excluded from coverage: only engine.step counts here
+    assert coverage(spans, 1.0) == pytest.approx(0.6)
+    assert coverage(spans, 0.0) == 0.0
+
+
+# ----------------------------------------------- engine instrumentation
+@pytest.fixture(scope="module")
+def clique_setup():
+    """Spill + refill + late pruning all active (the instrumented paths)."""
+    g = densifying_graph(96, 900, seed=0)
+    comp = make_clique_computation(g)
+    cfg = EngineConfig(k=3, batch=8, pool_capacity=128, max_steps=100_000)
+    ref = Engine(comp, cfg).run()
+    assert ref.spilled > 0 and ref.refilled > 0
+    return comp, cfg, ref
+
+
+def _require_devices(n: int) -> None:
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs >= {n} devices (force host devices with "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count={n})")
+
+
+def _assert_parity(ref, res):
+    assert np.array_equal(ref.result_keys, res.result_keys)
+    assert np.array_equal(ref.result_states, res.result_states)
+
+
+@pytest.mark.parametrize("shards", [1, 2, 8])
+@pytest.mark.parametrize("T", [1, 16])
+def test_observe_parity(clique_setup, shards, T):
+    """observe=True is a pure observer: results are byte-identical to the
+    unobserved run at every shard count and fusion factor."""
+    _require_devices(shards)
+    comp, cfg, ref = clique_setup
+    obs_cfg = dataclasses.replace(cfg, steps_per_sync=T, observe=True)
+    if shards == 1:
+        eng = Engine(comp, obs_cfg)
+    else:
+        from repro.distributed import ShardedEngine
+        eng = ShardedEngine(comp, dataclasses.replace(
+            obs_cfg, shards=shards))
+    res = eng.run()
+    _assert_parity(ref, res)
+    # the observer actually observed
+    m = eng.obs.metrics
+    assert m.get("engine_steps_total").value == res.steps
+    assert m.get("engine_candidates_total").value > 0
+    assert m.get("vpq_spilled_entries_total").value == res.spilled
+    assert eng.obs.tracer.total_recorded > 0
+    names = {s[0] for s in eng.obs.tracer.spans()}
+    assert {"engine.start", "engine.step", "engine.device_compute",
+            "engine.host_sync", "engine.finalize"} <= names
+
+
+def test_observe_off_records_nothing(clique_setup):
+    comp, cfg, ref = clique_setup
+    eng = Engine(comp, cfg)    # observe defaults off
+    res = eng.run()
+    _assert_parity(ref, res)
+    assert eng.obs is NOOP
+    assert eng.obs.tracer.total_recorded == 0
+
+
+def test_observe_coverage(clique_setup):
+    """Top-level spans account for nearly all of an instrumented run's
+    wall time (the §16 ≥90% acceptance bar is asserted on the larger
+    bench cell; this is the fast smoke floor)."""
+    import time
+    comp, cfg, _ref = clique_setup
+    eng = Engine(comp, dataclasses.replace(cfg, observe=True))
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    spans = eng.obs.tracer.spans()
+    cov = coverage(spans, wall)
+    assert cov >= 0.85, format_table(spans, wall)
+    assert cov <= 1.5   # sanity: not double-counting nested spans
+
+
+def test_shared_observability_across_engines(clique_setup):
+    """EngineConfig.observability injects a shared registry — two engines
+    accumulate into the same counters (the service-process pattern)."""
+    comp, cfg, _ref = clique_setup
+    shared = Observability()
+    for _ in range(2):
+        Engine(comp, dataclasses.replace(
+            cfg, observe=True, observability=shared)).run()
+    steps = shared.metrics.get("engine_steps_total").value
+    single = Engine(comp, dataclasses.replace(cfg, observe=True))
+    single.run()
+    assert steps == 2 * single.obs.metrics.get("engine_steps_total").value
+
+
+def test_checkpoint_spans_and_metrics(clique_setup, tmp_path):
+    comp, cfg, ref = clique_setup
+    eng = Engine(comp, dataclasses.replace(
+        cfg, observe=True, checkpoint_every=20,
+        checkpoint_dir=str(tmp_path)))
+    res = eng.run()
+    _assert_parity(ref, res)
+    m = eng.obs.metrics
+    assert m.get("checkpoint_saves_total").value > 0
+    assert m.get("checkpoint_bytes_written_total").value > 0
+    assert m.get("checkpoint_commit_seconds").count > 0
+    names = {s[0] for s in eng.obs.tracer.spans()}
+    assert {"checkpoint.save", "checkpoint.capture",
+            "checkpoint.commit"} <= names
+
+
+# ------------------------------------------------------------ service layer
+@pytest.fixture(scope="module")
+def social():
+    return densifying_graph(80, 400, seed=3)
+
+
+def _service(social, **kw):
+    svc = DiscoveryService(**kw)
+    svc.register_graph("social", social)
+    return svc
+
+
+def test_observe_excluded_from_cache_key(social):
+    """observe is a pure observer (same discipline as checkpointing): two
+    requests differing only in observe share one cache entry."""
+    base = dict(graph="social", workload="clique", k=3, step_budget=50)
+    req_off = DiscoveryRequest(**base)
+    req_on = DiscoveryRequest(**base, observe=True)
+    assert req_off.canonical_spec() == req_on.canonical_spec()
+    assert "observe" not in req_on.canonical_spec()
+
+    svc = _service(social, observability=Observability())
+    r1 = svc.query(req_on)
+    r2 = svc.query(req_off)
+    assert r1.status == r2.status == "ok"
+    assert not r1.cached and r2.cached
+    assert r1.results == r2.results
+    assert svc.obs.metrics.get("service_cache_hits_total").value == 1
+    assert svc.obs.metrics.get("service_cache_misses_total").value == 1
+
+
+def test_service_metrics_accumulate(social):
+    svc = _service(social, observability=Observability())
+    ok = svc.query(DiscoveryRequest(graph="social", workload="clique",
+                                    k=3, step_budget=40, observe=True))
+    assert ok.status == "ok"
+    bad = svc.query(DiscoveryRequest(graph="nope", workload="clique", k=3))
+    assert bad.status == "error"
+    m = svc.obs.metrics
+    assert m.get("service_requests_total").value == 2
+    assert m.get("service_validation_errors_total").value == 1
+    assert m.get("service_request_seconds").count >= 1
+    assert m.get("service_queue_wait_seconds").count >= 1
+    # engine steps flowed into the shared registry via the observe knob
+    assert m.get("service_engine_steps_total").value == \
+        m.get("engine_steps_total").value > 0
+    assert ok.stats["straggler_steps"] == 0
+
+
+def test_service_default_is_noop(social):
+    svc = _service(social)
+    assert svc.obs is NOOP
+    resp = svc.query(DiscoveryRequest(graph="social", workload="clique",
+                                      k=3, step_budget=40))
+    assert resp.status == "ok"
+    assert NOOP.tracer.total_recorded == 0
